@@ -1,0 +1,266 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+"""Roofline derivation from compiled dry-runs (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step-per-chip:
+
+    t_compute    = HLO_FLOPs / 197e12          (bf16 peak per chip)
+    t_memory     = HLO_bytes / 819e9           (HBM bandwidth)
+    t_collective = collective_bytes / 50e9     (per-link ICI serialisation)
+
+XLA's ``cost_analysis`` counts a ``while`` (scan) body ONCE, not x trips —
+measured in this container (see EXPERIMENTS.md §Dry-run notes). Since every
+model here scans its layer stack, this harness lowers each cell at TWO
+small depths (L and L+1 scanned units) and extrapolates linearly: the
+difference isolates the exact per-unit cost, the base captures everything
+outside the loop (embedding, head, loss, optimiser). Collective bytes from
+the HLO text are extrapolated the same way.
+
+MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (inference),
+reported as a ratio against HLO FLOPs to expose remat/padding waste.
+
+Run standalone (needs the 512-device env var set above, so invoke as its
+own process): ``PYTHONPATH=src:. python -m benchmarks.roofline``.
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+PEAK_FLOPS = 197e12   # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9        # bytes/s / chip
+ICI_BW = 50e9         # bytes/s / link
+
+BOTTLENECK_ADVICE = {
+    "compute": ("raise arithmetic intensity: larger per-chip batch, fewer "
+                "remat recomputes, or shift work onto the MXU (fused "
+                "attention)"),
+    "memory": ("cut HBM round-trips: fuse the scan-block chain, keep the "
+               "KV cache/activations in bf16, raise the attention chunk so "
+               "QK^T tiles stay resident"),
+    "collective": ("cut exchanged bytes or overlap them: 2-D sharding to "
+                   "shrink all-gathers, int8 gradient compression on the "
+                   "DP psum, async collectives behind the scan"),
+}
+
+
+def depth_variants(cfg):
+    """(cfg_a, cfg_b, units_true, units_a) — vary the scanned unit count.
+
+    Variants lower with ``unroll_layers=True`` so every layer and every
+    KV/SSD chunk appears in the HLO that cost_analysis sees. Depths are the
+    minimum (1 vs 2 units) — unrolled traces of the 8k-d_model archs are
+    expensive to compile on this container's single core."""
+    fam = cfg.family
+    rep = lambda **kw: dataclasses.replace(cfg, unroll_layers=True, **kw)
+    if fam in ("dense", "ssm"):
+        a, b = 1, 2
+        return rep(n_layers=a), rep(n_layers=b), cfg.n_layers, a
+    if fam == "moe":
+        fd = int(cfg.first_layer_dense)
+        a, b = 1 + fd, 2 + fd
+        return (rep(n_layers=a), rep(n_layers=b), cfg.n_layers - fd, 1)
+    if fam == "hybrid":
+        gs = cfg.hybrid_attn_every
+        G_true = cfg.n_layers // gs
+        tail = cfg.n_layers - G_true * gs
+        return (rep(n_layers=1 * gs + tail), rep(n_layers=2 * gs + tail),
+                G_true, 1)
+    if fam == "encdec":
+        a, b = 1, 2
+        return (rep(n_layers=a, n_enc_layers=a),
+                rep(n_layers=b, n_enc_layers=b),
+                cfg.n_layers, a)  # enc and dec share the true count (24/24)
+    if fam == "vlm":
+        k = cfg.cross_attn_every
+        G_true = cfg.n_layers // k
+        return rep(n_layers=1 * k), rep(n_layers=2 * k), G_true, 1
+    raise ValueError(fam)
+
+
+def count_params(cfg):
+    from repro.models import model as M
+
+    shapes = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    return sum(x.size for x in jax.tree.leaves(shapes))
+
+
+def active_params(cfg):
+    n = count_params(cfg)
+    if cfg.family != "moe":
+        return n
+    routed_layers = cfg.n_layers - int(cfg.first_layer_dense)
+    routed = routed_layers * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff
+    return n - routed + routed * cfg.top_k / cfg.n_experts
+
+
+def model_flops_per_chip(cfg, shape, n_dev):
+    from repro.configs.base import SHAPES
+
+    s = SHAPES[shape]
+    n_act = active_params(cfg)
+    if s["kind"] == "train":
+        tokens = s["batch"] * s["seq"]
+        total = 6.0 * n_act * tokens
+    elif s["kind"] == "prefill":
+        total = 2.0 * n_act * s["batch"] * s["seq"]
+    else:  # decode: one token per sequence
+        total = 2.0 * n_act * s["batch"]
+    return total / n_dev
+
+
+# quadratic-fit abscissae per shape kind: per-layer cost is a + b·S + c·S²
+# (attention quadratic, SSD/linear layers affine at fixed chunk), so three
+# small-S lowerings determine the target-S value. (The bitonic sortperm in
+# MoE routing is O(S log² S) — the quadratic fit over-estimates it by a few
+# percent at 2x extrapolation; noted in EXPERIMENTS.md.)
+_FIT_SEQS = {"train": (512, 1024, 2048), "prefill": (1024, 2048, 4096)}
+
+
+def _metrics(rec):
+    return (
+        rec["flops"],
+        rec["bytes_accessed"],
+        float(sum(rec["collectives"]["bytes"].values())),
+    )
+
+
+def _quad_eval(seqs, ys, s_target, degree=2):
+    """Polynomial through the sample points, evaluated at s_target.
+
+    Per-layer cost is a + b·S + c·S² by construction (attention is the only
+    quadratic term; SSD/linear layers are affine in S at fixed chunk).
+    Collectives are linear in S (activation all-reduces) + constant (weight
+    gathers) — fit degree 1 — and all extrapolations clamp at the largest
+    observed value (a step-quantised series can otherwise dip negative)."""
+    import numpy as np
+
+    coef = np.polyfit(np.asarray(seqs, float), np.asarray(ys, float),
+                      degree)
+    return float(max(np.polyval(coef, s_target), max(ys)if s_target >= max(seqs) else 0.0, 0.0))
+
+
+def _lower_metrics(arch, shape, mesh, cfg, use_ep):
+    from repro.configs import base as CB
+    from repro.launch.dryrun import lower_cell
+
+    sdict = CB.SHAPES[shape] if isinstance(shape, str) else shape
+    fit = _FIT_SEQS.get(sdict["kind"])
+    if fit and sdict["seq"] > min(fit):
+        # full-length unrolled chunk scans are too slow to compile on this
+        # container's single core — fit cost(S) at three small sequences.
+        per_seq = []
+        rep = None
+        for s in fit:
+            rep = lower_cell(
+                arch, dict(sdict, seq=s), mesh, cfg=cfg, use_ep=use_ep
+            )
+            per_seq.append(_metrics(rep))
+        vals = tuple(
+            _quad_eval(fit, [m[i] for m in per_seq], sdict["seq"],
+                       degree=2 if i < 2 else 1)
+            for i in range(3)
+        )
+        return vals, rep
+    rep = lower_cell(arch, shape, mesh, cfg=cfg, use_ep=use_ep)
+    return _metrics(rep), rep
+
+
+def extrapolated_record(arch, shape, mesh, *, use_ep=True):
+    """Lower depth-a and depth-a+1 variants (reduced-seq-fit for 32k
+    prefill), extrapolate to true depth."""
+    from repro.configs import base as CB
+
+    cfg = CB.load_config(arch)
+    cfg_a, cfg_b, units_true, units_a = depth_variants(cfg)
+    (fa, ba, ca), ra = _lower_metrics(arch, shape, mesh, cfg_a, use_ep)
+    (fb, bb, cb), rb = _lower_metrics(arch, shape, mesh, cfg_b, use_ep)
+
+    def ext(a, b):
+        return a + (b - a) * (units_true - units_a)
+
+    return {
+        "arch": arch, "shape": shape,
+        "mesh": ra["mesh"], "devices": ra["devices"],
+        "flops": ext(fa, fb), "bytes": ext(ba, bb),
+        "coll_bytes": ext(ca, cb),
+        "per_layer": {"flops": fb - fa, "bytes": bb - ba, "coll": cb - ca},
+        "units": units_true,
+        "collective_mix": rb["collectives"]["bytes"],
+    }
+
+
+def roofline_terms(rec, cfg):
+    t_c = rec["flops"] / PEAK_FLOPS
+    t_m = rec["bytes"] / HBM_BW
+    t_x = rec["coll_bytes"] / ICI_BW
+    dom = max(
+        (("compute", t_c), ("memory", t_m), ("collective", t_x)),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops_per_chip(cfg, rec["shape"], rec["devices"])
+    return {
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_collective_s": t_x,
+        "bottleneck": dom,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": mf / max(rec["flops"], 1.0),
+        "roofline_fraction": min(mf / PEAK_FLOPS / max(t_c, t_m, t_x), 1.0),
+        "advice": BOTTLENECK_ADVICE[dom],
+    }
+
+
+def main(argv=None):
+    from repro.configs import base as CB
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/roofline")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_name = "multi" if args.multi_pod else "single"
+    cells = CB.cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+
+    for arch, shape, _ in cells:
+        tag = f"{arch}.{shape}.{mesh_name}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag}")
+            continue
+        try:
+            rec = extrapolated_record(arch, shape, mesh)
+            cfg = CB.load_config(arch)
+            rec.update(roofline_terms(rec, cfg))
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(
+                f"[ok] {tag}: compute {rec['t_compute_s']:.3e}s  "
+                f"memory {rec['t_memory_s']:.3e}s  collective "
+                f"{rec['t_collective_s']:.3e}s  -> {rec['bottleneck']}  "
+                f"(useful-flops {rec['useful_flops_ratio']:.2f}, roofline "
+                f"{rec['roofline_fraction']:.2%})"
+            )
+        except Exception as e:
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+            import traceback
+
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

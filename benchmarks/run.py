@@ -1,0 +1,60 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+    table2.*        — §III arithmetic kernels (RBF + LJG)          [Table II]
+    fig_scaling.*   — distributed-sort weak/strong scaling         [Figs 1-3]
+    fig4.*          — max sorting throughput                       [Fig 4]
+    fig5.*          — cost-normalised accelerator crossover        [Fig 5]
+    roofline.*      — per-(arch x shape) dry-run rooflines (from
+                      results/roofline/*.json if derived; run
+                      ``python -m benchmarks.roofline`` to populate)
+
+Sizes are CPU-container scale; the harness structure (not absolute numbers)
+reproduces the paper's tables. TPU-derived numbers live in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def roofline_rows(path="results/roofline"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        if os.path.basename(f) == "summary.json":
+            continue
+        rec = json.load(open(f))
+        dom = rec["bottleneck"]
+        t_dom = rec[f"t_{dom}_s"]
+        rows.append((
+            f"roofline.{rec['arch']}.{rec['shape']}",
+            t_dom * 1e6,
+            f"bottleneck={dom} useful_flops={rec['useful_flops_ratio']:.2f}"
+            f" roofline_frac={rec['roofline_fraction']:.2%}",
+        ))
+    if not rows:
+        rows.append(("roofline.missing", 0.0,
+                     "run: PYTHONPATH=src:. python -m benchmarks.roofline"))
+    return rows
+
+
+def main() -> None:
+    from benchmarks import arithmetic, cost, scaling, throughput
+
+    _emit(arithmetic.run(n=1_000_000))
+    _emit(scaling.run("weak", n_per_rank=32_768, devcounts=(1, 2, 4, 8)))
+    _emit(scaling.run("strong", total=262_144, devcounts=(1, 2, 4, 8)))
+    _emit(throughput.run(devcounts=(4,), sizes=(16_384, 65_536)))
+    _emit(cost.run())
+    _emit(roofline_rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""SIHSort demo — the paper's §IV multi-node sort on a host-device mesh.
+
+Self-relaunches with 8 fake devices (MPI-rank stand-ins), sorts several
+distributions + a key/payload pair, and prints the per-rank balance the
+interpolated-histogram splitters achieve.
+
+    PYTHONPATH=src python examples/distributed_sort.py
+"""
+import os
+import subprocess
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    raise SystemExit(
+        subprocess.call([sys.executable, os.path.abspath(__file__)], env=env)
+    )
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import core as ak  # noqa: E402
+
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+n = 8 * 65_536
+
+print(f"devices (MPI-rank stand-ins): {len(jax.devices())}")
+print(f"global elements: {n:,}\n")
+
+for dist, data in [
+    ("normal", rng.normal(size=n).astype(np.float32)),
+    ("skewed lognormal", rng.lognormal(0, 2, size=n).astype(np.float32)),
+    ("int32", rng.integers(-10**6, 10**6, size=n).astype(np.int32)),
+]:
+    res = ak.sihsort_sharded(jnp.asarray(data), mesh, "data",
+                             capacity_factor=2.0)
+    out = np.asarray(ak.collect_sorted(res))
+    counts = np.asarray(res.count).reshape(-1)
+    assert np.array_equal(out, np.sort(data))
+    print(f"{dist:18s} sorted ✓  balance {counts.min():6d}..{counts.max():6d}"
+          f"  (ideal {n // 8})  overflow {int(np.asarray(res.overflow).sum())}")
+
+# key/payload — the data-pipeline global shuffle building block
+keys = rng.normal(size=n).astype(np.float32)
+payload = np.arange(n, dtype=np.int32)
+res = ak.sihsort_sharded(jnp.asarray(keys), mesh, "data",
+                         payload=jnp.asarray(payload), capacity_factor=2.0)
+vals = np.asarray(res.values).reshape(8, -1)
+pays = np.asarray(res.payload).reshape(8, -1)
+cnt = np.asarray(res.count).reshape(-1)
+got_k = np.concatenate([vals[r, :cnt[r]] for r in range(8)])
+got_p = np.concatenate([pays[r, :cnt[r]] for r in range(8)])
+assert np.array_equal(keys[got_p], got_k)
+print("\nkey/payload co-sort ✓ — every pair survived the exchange intact")

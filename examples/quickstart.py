@@ -1,0 +1,46 @@
+"""Quickstart: the AK primitive suite in 60 seconds.
+
+Mirrors the paper's §II-B tour — every primitive, both backends, plus the
+Algorithm 3 `foreachindex` copy kernel.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as ak
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=100_000).astype(np.float32))
+
+# -- Algorithm 3: the foreachindex copy kernel ------------------------------
+src = x
+dst = ak.foreachindex(lambda i: src[i], src.shape[0])
+assert bool((dst == src).all())
+
+# -- the full suite, portable (XLA) path ------------------------------------
+print("merge_sort        :", ak.merge_sort(x)[:4])
+print("sortperm          :", ak.sortperm(x)[:4])
+print("sortperm_lowmem   :", ak.sortperm_lowmem(x)[:4])
+print("reduce (+)        :", float(ak.reduce(jnp.add, x, init=0.0)))
+print("mapreduce (x²,+)  :",
+      float(ak.mapreduce(lambda a: a * a, jnp.add, x, init=0.0)))
+print("accumulate (max)  :", ak.accumulate(jnp.maximum, x,
+                                           init=-np.inf)[-4:])
+hay = ak.merge_sort(x)
+print("searchsortedfirst :", ak.searchsortedfirst(hay, x[:4]))
+print("searchsortedlast  :", ak.searchsortedlast(hay, x[:4]))
+print("any > 4σ          :", bool(ak.any_pred(lambda a: a > 4.0, x)))
+print("all finite        :", bool(ak.all_pred(jnp.isfinite, x)))
+hist, mn, mx = ak.minmax_histogram(x, 16, -4.0, 4.0)
+print("histogram         :", hist)
+
+# -- the same call sites, hand-tiled Pallas TPU path ------------------------
+# (interpret-mode on CPU; identical results — the paper's dispatch story)
+with ak.backend("pallas"):
+    s2 = ak.merge_sort(x)
+    r2 = ak.reduce(jnp.add, x, init=0.0)
+np.testing.assert_array_equal(np.asarray(s2), np.asarray(hay))
+np.testing.assert_allclose(float(r2),
+                           float(ak.reduce(jnp.add, x, init=0.0)), rtol=1e-4)
+print("pallas backend    : identical results ✓")

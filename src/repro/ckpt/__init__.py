@@ -1,0 +1,6 @@
+from repro.ckpt.checkpoint import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    save,
+)

@@ -1,0 +1,11 @@
+"""Assigned-architecture configs (exact published numbers) + smoke variants."""
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    SUBQUADRATIC,
+    ModelConfig,
+    cells,
+    input_specs,
+    load_config,
+    load_smoke_config,
+)

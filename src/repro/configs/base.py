@@ -1,0 +1,182 @@
+"""Architecture config schema + the four assigned input shapes.
+
+One ``<arch>.py`` per assigned architecture lives next to this file; each
+exports ``CONFIG`` (exact published numbers) and ``smoke_config()`` (a
+reduced same-family config for CPU tests). ``input_specs`` builds the
+ShapeDtypeStruct stand-ins the dry-run lowers against — no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int           # attention query heads (0 for attn-free)
+    n_kv_heads: int
+    d_ff: int               # dense FFN width (per-expert width for MoE)
+    vocab: int
+
+    head_dim: int = 0       # 0 -> d_model // n_heads
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    first_layer_dense: bool = False  # deepseek-moe keeps layer 0 dense
+
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # hybrid (zamba2): one *shared* attention block applied every k layers
+    hybrid_attn_every: int = 0
+
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    enc_seq: int = 1536      # whisper frames (1500 padded to 8*192)
+
+    # VLM (llama-3.2-vision): cross-attn layer every k layers
+    cross_attn_every: int = 0
+    vision_seq: int = 1664   # stubbed patch-embedding count (128-aligned)
+
+    # training
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # "full" recomputes everything in backward (min memory); "dots" saves
+    # matmul outputs (skips the recompute flops — §Perf iteration 4);
+    # remat=False disables checkpointing entirely.
+    remat_policy: str = "full" 
+
+    # cost-model mode: unroll every layer/chunk scan so XLA cost_analysis
+    # sees each iteration (scan bodies are counted once, not x trips —
+    # benchmarks/roofline.py lowers shallow unrolled variants and
+    # extrapolates). Never set for production lowering.
+    unroll_layers: bool = False
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def ssm_heads(self) -> int:
+        return (self.ssm_expand * self.d_model) // self.ssm_headdim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def padded_vocab(self, tp: int = 16) -> int:
+        """Vocab rounded up so the model-axis shard is 128-lane aligned."""
+        q = 128 * tp
+        return -(-self.vocab // q) * q
+
+
+# ---------------------------------------------------------------------------
+# Assigned shape suite (seq_len, global_batch, kind)
+# ---------------------------------------------------------------------------
+SHAPES = {
+    "train_4k":    dict(seq=4_096,   batch=256, kind="train"),
+    "prefill_32k": dict(seq=32_768,  batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq=32_768,  batch=128, kind="decode"),
+    "long_500k":   dict(seq=524_288, batch=1,   kind="decode"),
+}
+
+ARCH_IDS = [
+    "whisper_medium",
+    "zamba2_7b",
+    "llama32_vision_90b",
+    "glm4_9b",
+    "internlm2_1_8b",
+    "deepseek_67b",
+    "yi_34b",
+    "granite_moe_1b",
+    "deepseek_moe_16b",
+    "mamba2_1_3b",
+]
+
+# long_500k needs sub-quadratic sequence mixing; only SSM/hybrid archs run it
+# (DESIGN.md §6 records the skip for the pure full-attention archs).
+SUBQUADRATIC = {"zamba2_7b", "mamba2_1_3b"}
+
+
+def load_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def load_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.smoke_config()
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells, honouring the long_500k rule."""
+    out = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            skipped = shape == "long_500k" and arch not in SUBQUADRATIC
+            if skipped and not include_skipped:
+                continue
+            out.append((arch, shape, skipped))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name, *, tp: int = 16):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train   -> {tokens, labels [, frames | patches]}
+    prefill -> {tokens [, frames | patches]}
+    decode  -> {tokens(B,1), caches, position [, encoder state]}
+
+    ``shape_name``: a SHAPES key, or a dict(seq=, batch=, kind=) override
+    (benchmarks/roofline.py lowers reduced-seq variants for its fits).
+    """
+    from repro.models import model as M  # local import to avoid cycles
+
+    s = SHAPES[shape_name] if isinstance(shape_name, str) else shape_name
+    B, S = s["batch"], s["seq"]
+    i32 = jnp.int32
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, i32)
+
+    extras = {}
+    if cfg.family == "encdec":
+        extras["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), cfg.dtype
+        )
+    if cfg.family == "vlm":
+        extras["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_seq, cfg.d_model), cfg.dtype
+        )
+
+    if s["kind"] == "train":
+        return dict(tokens=tok((B, S)), labels=tok((B, S)), **extras)
+    if s["kind"] == "prefill":
+        return dict(tokens=tok((B, S)), **extras)
+    # decode: one new token against caches of length S. Cross-modal K/V
+    # (encdec/vlm) lives in the caches — projected once at prefill — so the
+    # stub frontend inputs are not decode-step operands.
+    caches = M.cache_specs(cfg, batch=B, cache_len=S)
+    return dict(
+        tokens=tok((B, 1)),
+        position=jax.ShapeDtypeStruct((), i32),
+        caches=caches,
+    )

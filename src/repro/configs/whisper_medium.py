@@ -1,0 +1,41 @@
+"""whisper-medium [audio]: enc-dec transformer backbone.
+
+24 enc + 24 dec layers, d_model=1024, 16 heads (GQA kv=16 — i.e. MHA),
+d_ff=4096, vocab=51865.  [arXiv:2212.04356; unverified]
+
+Frontend: the log-mel conv stem is a STUB per the brief — ``input_specs``
+supplies precomputed frame embeddings (B, enc_seq, d_model). Deviations
+recorded here: decoder uses RoPE instead of learned positional embeddings
+(static-table-free so any assigned decode length lowers); encoder adds
+sinusoidal positions to the stub frames, as whisper does post-conv.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper_medium",
+    family="encdec",
+    n_layers=24,
+    n_enc_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51865,
+    enc_seq=1536,  # 1500 mel frames padded to a 128-multiple
+)
+
+
+def smoke_config():
+    return ModelConfig(
+        name="whisper_medium_smoke",
+        family="encdec",
+        n_layers=2,
+        n_enc_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=256,
+        enc_seq=32,
+        remat=False,
+    )

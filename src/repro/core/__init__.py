@@ -1,0 +1,44 @@
+"""repro.core — the paper's contribution: the AK primitive suite + SIHSort.
+
+Import as a namespace, AK-style::
+
+    from repro import core as ak
+    ak.merge_sort(x)                      # portable (XLA) path
+    ak.merge_sort(x, backend="pallas")    # hand-tiled TPU path
+    ak.sihsort(shard, axis_name="data")   # distributed (inside shard_map)
+"""
+from repro.core.dispatch import backend, default_backend, set_default_backend
+from repro.core.ops import (
+    accumulate,
+    all_pred,
+    any_pred,
+    foreachindex,
+    map_elements,
+    mapreduce,
+    reduce,
+)
+from repro.core.sort import (
+    merge_sort,
+    merge_sort_by_key,
+    sortperm,
+    sortperm_lowmem,
+    topk,
+)
+from repro.core.search import searchsortedfirst, searchsortedlast
+from repro.core.histogram import bincount, minmax_histogram
+from repro.core.distributed import (
+    ShardedSort,
+    collect_sorted,
+    sihsort,
+    sihsort_sharded,
+)
+
+__all__ = [
+    "backend", "default_backend", "set_default_backend",
+    "accumulate", "all_pred", "any_pred", "foreachindex", "map_elements",
+    "mapreduce", "reduce",
+    "merge_sort", "merge_sort_by_key", "sortperm", "sortperm_lowmem", "topk",
+    "searchsortedfirst", "searchsortedlast",
+    "bincount", "minmax_histogram",
+    "ShardedSort", "collect_sorted", "sihsort", "sihsort_sharded",
+]

@@ -1,0 +1,60 @@
+"""Backend dispatch — the JAX rendition of AK.jl's multiple dispatch.
+
+In Julia, ``mapreduce(f, op, itr::AbstractGPUVector)`` shadows the Base
+method so the *same call site* runs the Base CPU code for ``Vector`` and the
+transpiled kernel for ``CuArray``/``ROCArray``/``MtlArray``/``oneArray``.
+JAX arrays carry no such type split (placement is a sharding, not a type),
+so the dispatch key here is the **backend policy**:
+
+  * ``"pallas"`` — the hand-tiled TPU kernels in ``repro.kernels``
+    (interpret-mode on CPU: same kernel body, Python semantics);
+  * ``"jnp"``    — the portable XLA implementations (ref oracles), which XLA
+    lowers for whatever backend is active — CPU, GPU or TPU;
+  * ``"auto"``   — pallas on TPU, jnp elsewhere (mirrors AK defaulting to
+    the specialised method exactly when the accelerated array type shows up).
+
+Both paths are traceable, differentiable where meaningful, and shardable —
+so higher layers (MoE routing, SIHSort, samplers) never special-case the
+backend, which is the paper's composability claim.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+VALID = ("auto", "jnp", "pallas")
+
+
+def default_backend() -> str:
+    return getattr(_state, "backend", "auto")
+
+
+def set_default_backend(name: str) -> None:
+    if name not in VALID:
+        raise ValueError(f"backend must be one of {VALID}, got {name!r}")
+    _state.backend = name
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    """Scoped backend override: ``with dispatch.backend('pallas'): ...``"""
+    old = default_backend()
+    set_default_backend(name)
+    try:
+        yield
+    finally:
+        set_default_backend(old)
+
+
+def resolve(override: str | None = None) -> str:
+    """Resolve an (optional) per-call override to 'jnp' or 'pallas'."""
+    name = override or default_backend()
+    if name not in VALID:
+        raise ValueError(f"backend must be one of {VALID}, got {name!r}")
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return name

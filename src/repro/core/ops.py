@@ -1,0 +1,120 @@
+"""The AK.jl primitive suite, part 1: looping, reduction, scan, predicates.
+
+Function-for-function port of the paper's §II-B list. Every primitive takes
+an optional ``backend=`` override resolved by ``repro.core.dispatch`` and
+has two implementations: the portable jnp one and the Pallas TPU one.
+
+Fidelity notes (see DESIGN.md §2 for the full mapping):
+  * ``foreachindex(f, n)`` passes f an index *vector* instead of a scalar
+    thread index — one vreg lane per "thread".
+  * ``reduce``/``mapreduce`` keep the paper's ``switch_below``: below the
+    threshold the reduction skips the tiled kernel entirely (the analogue of
+    finishing on the host once launch overhead stops being masked).
+  * ``any``/``all`` use the paper's own conservative mapreduce fallback —
+    TPU has no well-defined racy single-winner write (named ``any_pred``/
+    ``all_pred``; Python reserves the bare names).
+  * Temporaries: these wrappers allocate nothing hidden — O(1) scratch in
+    the kernels, matching AK's "memory known ahead of time" contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def foreachindex(f, n: int, *, dtype=jnp.int32, backend: str | None = None):
+    """AK ``foreachindex``: evaluate ``f(indices)`` over 0..n-1.
+
+    ``f`` receives an int vector (a lane per iteration) and returns the
+    per-index values; closures capture surrounding arrays like AK do-blocks.
+    """
+    idx = jnp.arange(n, dtype=dtype)
+    return map_elements(f, idx, backend=backend)
+
+
+def map_elements(f, *arrays, out_dtype=None, backend: str | None = None):
+    """Elementwise ``f`` over same-shaped arrays (the do-block body)."""
+    if dispatch.resolve(backend) == "pallas":
+        return kops.map_elementwise(f, *arrays, out_dtype=out_dtype)
+    out = kref.map_ref(f, *arrays)
+    return out.astype(out_dtype) if out_dtype is not None else out
+
+
+def mapreduce(
+    f,
+    op,
+    *arrays,
+    init,
+    switch_below: int = 0,
+    out_dtype=None,
+    backend: str | None = None,
+):
+    """``mapreduce(f, op, itr; init)`` — f applied per element, op-folded.
+
+    ``switch_below``: below this element count the tiled kernel is skipped
+    (AK's host-finish trade-off, reshaped for a fused-graph world).
+    """
+    n = arrays[0].size
+    use_pallas = dispatch.resolve(backend) == "pallas" and n >= switch_below
+    if use_pallas and n > 0:
+        return kops.mapreduce(f, op, *arrays, unit=init, out_dtype=out_dtype)
+    return kref.reduce_ref(f, op, *arrays, unit=init, out_dtype=out_dtype)
+
+
+def reduce(
+    op,
+    x,
+    *,
+    init,
+    switch_below: int = 0,
+    out_dtype=None,
+    backend: str | None = None,
+):
+    """``reduce(op, itr; init)`` — no associativity-order guarantee, exactly
+    like the paper (parallel fold)."""
+    return mapreduce(
+        lambda a: a,
+        op,
+        x,
+        init=init,
+        switch_below=switch_below,
+        out_dtype=out_dtype,
+        backend=backend,
+    )
+
+
+def accumulate(
+    op, x, *, init, inclusive: bool = True, backend: str | None = None
+):
+    """``accumulate`` — prefix scan (inclusive or exclusive), single pass."""
+    if dispatch.resolve(backend) == "pallas":
+        return kops.accumulate(op, x, unit=init, exclusive=not inclusive)
+    return kref.scan_ref(op, x, unit=init, exclusive=not inclusive)
+
+
+def any_pred(f, x, *, backend: str | None = None):
+    """``any`` — conservative mapreduce form (paper's fallback algorithm)."""
+    return mapreduce(
+        lambda a: f(a),
+        jnp.logical_or,
+        x,
+        init=False,
+        out_dtype=jnp.bool_,
+        backend=backend,
+    )
+
+
+def all_pred(f, x, *, backend: str | None = None):
+    """``all`` — conservative mapreduce form (paper's fallback algorithm)."""
+    return mapreduce(
+        lambda a: f(a),
+        jnp.logical_and,
+        x,
+        init=True,
+        out_dtype=jnp.bool_,
+        backend=backend,
+    )

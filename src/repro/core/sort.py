@@ -1,0 +1,81 @@
+"""The AK.jl primitive suite, part 2: sorting.
+
+``merge_sort`` / ``merge_sort_by_key`` / ``sortperm`` / ``sortperm_lowmem``
+from the paper §II-B.  The TPU specialisation is the blocked bitonic network
+(kernels/sort_kernel.py — DESIGN.md §2 records why a literal merge sort is
+the wrong shape for this hardware); the portable path is ``jnp.sort`` /
+``jnp.argsort`` which XLA lowers to its own sorting network.
+
+``topk`` is an extension the LM substrate needs (MoE routing, samplers); it
+is sort-derived, as in AK where it would compose from the same blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def merge_sort(x, *, descending: bool = False, backend: str | None = None):
+    """Sort a 1-D collection (AK ``merge_sort``; allocating form)."""
+    if dispatch.resolve(backend) == "pallas":
+        return kops.sort(x, descending=descending)
+    return kref.sort_ref(x, descending=descending)
+
+
+def merge_sort_by_key(keys, vals, *, backend: str | None = None):
+    """Sort (keys, payload) kept in separate arrays (AK
+    ``merge_sort_by_key``). Equal-key payload order is unspecified, exactly
+    as in a non-stable parallel sort."""
+    if dispatch.resolve(backend) == "pallas":
+        return kops.sort_kv(keys, vals)
+    return kref.sort_kv_ref(keys, vals)
+
+
+def sortperm(x, *, backend: str | None = None):
+    """Index permutation that sorts ``x`` (AK ``sortperm``), stable.
+
+    Implemented as a by-key sort of (x, iota) with (key, index) lexicographic
+    ties — the faster, +50%-memory variant of the paper.
+    """
+    if dispatch.resolve(backend) == "pallas":
+        return kops.argsort(x)
+    return kref.argsort_ref(x)
+
+
+def sortperm_lowmem(x, *, backend: str | None = None):
+    """AK ``sortperm_lowmem``: trade speed for footprint.
+
+    The payload rides as packed low bits of a widened key (one array instead
+    of two): f32/i32 keys widen to i64 = (key-bits << 32) | index, sorted
+    key-only, indices unpacked. One n-element temp vs two.
+
+    Needs 64-bit ints; when jax x64 is disabled (the default) this falls
+    back to the two-array ``sortperm`` — same results, AK's memory note
+    simply doesn't apply.
+    """
+    n = x.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    if not jax.config.jax_enable_x64 or x.dtype not in (
+        jnp.float32, jnp.int32
+    ):
+        return sortperm(x, backend=backend)
+    if x.dtype == jnp.float32:
+        bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+        # order-preserving int mapping of IEEE754: flip sign bit, or all bits
+        bits = jnp.where(bits < 0, ~bits, bits ^ jnp.int32(-2147483648))
+    else:
+        bits = x
+    wide = (bits.astype(jnp.int64) << 32) | jnp.arange(n, dtype=jnp.int64)
+    swide = merge_sort(wide, backend=backend)
+    return (swide & (2**32 - 1)).astype(jnp.int32)
+
+
+def topk(x, k: int, *, backend: str | None = None):
+    """Top-k values and indices along the last axis (descending)."""
+    del backend  # lax.top_k is already the right primitive on every backend
+    return jax.lax.top_k(x, k)

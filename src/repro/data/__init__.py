@@ -1,0 +1,5 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticCorpus,
+    global_shuffle_by_sort,
+    make_batches,
+)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the AK primitive suite.
+
+Layout per the repo convention: ``<name>_kernel.py`` holds the
+``pl.pallas_call`` + BlockSpec tiling, ``ops.py`` the jit'd public wrappers,
+``ref.py`` the pure-jnp oracles the tests sweep against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

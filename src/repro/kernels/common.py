@@ -1,0 +1,79 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels in this package are written against the TPU lowering rules
+(2-D blocks, last dim a multiple of 128, second-to-last a multiple of the
+sublane count) and are validated on CPU with ``interpret=True`` — the kernel
+body runs in Python with jnp semantics, which is the container-supported
+path (this box has no TPU).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+# TPU vector-register geometry (v4/v5): 8 sublanes x 128 lanes.
+SUBLANES = 8
+LANES = 128
+TILE = SUBLANES * LANES  # 1024 elements: the minimum well-shaped f32 tile.
+
+# Default block used by the 1-D streaming kernels (map/reduce/scan/hist):
+# (8, 1024) f32 = 32 KiB per operand — small against ~16 MiB VMEM, so
+# several operands + double-buffering fit comfortably.
+BLOCK_ROWS = 8
+BLOCK_COLS = 1024
+BLOCK_ELEMS = BLOCK_ROWS * BLOCK_COLS
+
+
+def interpret_mode() -> bool:
+    """Pallas kernels run in interpret mode everywhere except real TPUs."""
+    return jax.default_backend() != "tpu"
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def pad_to(x: jax.Array, n: int, fill) -> jax.Array:
+    """Pad 1-D ``x`` up to length ``n`` with ``fill``."""
+    pad = n - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), fill, dtype=x.dtype)])
+
+
+def type_max(dtype) -> jax.Array:
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def type_min(dtype) -> jax.Array:
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).min, dtype)
+
+
+def as_blocks(x: jax.Array, fill) -> tuple[jax.Array, int]:
+    """Flatten ``x``, pad to a BLOCK_ELEMS multiple and reshape to
+    (rows, BLOCK_COLS). Returns the 2-D view and the original length.
+
+    Row-major order preserves the flat element order, which the scan kernel
+    relies on.
+    """
+    n = x.size
+    flat = x.reshape(-1)
+    padded = pad_to(flat, max(round_up(n, BLOCK_ELEMS), BLOCK_ELEMS), fill)
+    return padded.reshape(-1, BLOCK_COLS), n

@@ -1,0 +1,69 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+This is the surface `repro.core` dispatches to when the backend policy
+selects the hand-tiled TPU path. Every function has a same-signature oracle
+in `repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import hist_kernel, map_kernel, reduce_kernel, scan_kernel
+from repro.kernels import search_kernel, sort_kernel
+
+
+def map_elementwise(f, *arrays, out_dtype=None):
+    """foreachindex: elementwise f over same-shaped arrays."""
+    fn = jax.jit(
+        functools.partial(map_kernel.map_blocks, f, out_dtype=out_dtype)
+    )
+    return fn(*arrays)
+
+
+def mapreduce(f, op, *arrays, unit, out_dtype=None):
+    fn = jax.jit(
+        functools.partial(
+            reduce_kernel.reduce_blocks, f, op, unit=unit, out_dtype=out_dtype
+        )
+    )
+    return fn(*arrays)
+
+
+def accumulate(op, x, *, unit, exclusive=False):
+    fn = jax.jit(
+        functools.partial(
+            scan_kernel.scan_blocks, op, unit=unit, exclusive=exclusive
+        )
+    )
+    return fn(x)
+
+
+@functools.partial(jax.jit, static_argnames=("descending",))
+def sort(keys, *, descending=False):
+    return sort_kernel.bitonic_sort(keys, descending=descending)
+
+
+@functools.partial(jax.jit, static_argnames=("tie_break",))
+def sort_kv(keys, vals, *, tie_break=False):
+    return sort_kernel.bitonic_sort_kv(keys, vals, tie_break=tie_break)
+
+
+@jax.jit
+def argsort(keys):
+    """Index permutation sorting ``keys`` (AK ``sortperm``), stable."""
+    idx = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    _, perm = sort_kernel.bitonic_sort_kv(keys, idx, tie_break=True)
+    return perm
+
+
+@functools.partial(jax.jit, static_argnames=("side",))
+def searchsorted(hay, queries, *, side="left"):
+    return search_kernel.searchsorted_blocks(hay, queries, side=side)
+
+
+@functools.partial(jax.jit, static_argnames=("nbins",))
+def minmax_histogram(x, nbins, lo, hi):
+    return hist_kernel.minmax_histogram_blocks(x, nbins, lo, hi)

@@ -1,0 +1,81 @@
+"""``reduce`` / ``mapreduce`` — tiled two-level reduction.
+
+AK.jl reduces within workgroups (shared memory) and then across workgroup
+partials, optionally finishing tiny tails on the host (``switch_below``).
+TPU adaptation: the Pallas grid on a TensorCore executes **in order**, so the
+cross-workgroup level becomes a running partial held in a VMEM scratch
+accumulator — no atomics, no second launch.  The ``switch_below`` insight
+(stop paying launch overhead on tiny tails) is preserved structurally:
+there is only ever ONE launch here.
+
+The accumulator is (8, 128) vector-shaped rather than scalar: reducing each
+(8, 1024) block to a scalar every grid step would serialise on the scalar
+unit; folding to a vreg keeps the VPU busy, and the vreg is collapsed to a
+scalar once, in the final grid step.  This mirrors the paper's "no warp
+shuffles, still fast" design point — partials stay in vector registers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common as C
+
+_ACC_ROWS, _ACC_COLS = C.SUBLANES, C.LANES
+
+
+def _reduce_body(f, op, unit, n_ops, *refs):
+    # refs = (*in_refs, out_ref, acc_ref)
+    i = pl.program_id(0)
+    acc, out = refs[-1], refs[-2]
+    ins = [refs[k][...] for k in range(n_ops)]
+    mapped = f(*ins)  # (BLOCK_ROWS, BLOCK_COLS)
+    # Fold the (8, 1024) block into an (8, 128) vreg-shaped partial.
+    part = mapped.reshape(_ACC_ROWS, -1, _ACC_COLS)
+    part = functools.reduce(op, [part[:, j, :] for j in range(part.shape[1])])
+
+    @pl.when(i == 0)
+    def _init():
+        acc[...] = jnp.full((_ACC_ROWS, _ACC_COLS), unit, mapped.dtype)
+
+    acc[...] = op(acc[...], part)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fin():
+        a = acc[...]
+        r = functools.reduce(op, [a[k, :] for k in range(_ACC_ROWS)])
+        # Collapse 128 lanes with a log2 tree of vector halves.
+        length = _ACC_COLS
+        while length > 1:
+            length //= 2
+            r = op(r[:length], r[length:])
+        out[0, 0] = r[0]
+
+
+def reduce_blocks(f, op, *arrays: jax.Array, unit, out_dtype=None) -> jax.Array:
+    """``mapreduce(f, op, arrays...) -> scalar`` via one sequential-grid kernel.
+
+    ``unit`` must be the identity of ``op``; it pads the tail block and seeds
+    the accumulator. Returns a 0-d array of ``out_dtype``.
+    """
+    x0 = arrays[0]
+    out_dtype = jnp.dtype(out_dtype or x0.dtype)
+    views = [C.as_blocks(a, fill=jnp.asarray(unit, a.dtype))[0] for a in arrays]
+    rows = views[0].shape[0]
+    grid = (rows // C.BLOCK_ROWS,)
+    spec = pl.BlockSpec((C.BLOCK_ROWS, C.BLOCK_COLS), lambda i: (i, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_reduce_body, f, op, unit, len(views)),
+        grid=grid,
+        in_specs=[spec] * len(views),
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), out_dtype),
+        scratch_shapes=[pltpu.VMEM((_ACC_ROWS, _ACC_COLS), out_dtype)],
+        interpret=C.interpret_mode(),
+    )(*views)
+    return out[0, 0]

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the "Julia Base method" of the paper's dispatch story: the
+portable, always-correct implementations the specialised kernels are
+validated against (tests/test_kernels_*.py sweeps shapes × dtypes and
+asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def map_ref(f, *arrays):
+    return f(*arrays)
+
+
+def reduce_ref(f, op, *arrays, unit, out_dtype=None):
+    mapped = f(*arrays).astype(out_dtype or arrays[0].dtype)
+    flat = mapped.reshape(-1)
+    acc = jnp.asarray(unit, flat.dtype)
+    return jax.lax.reduce(flat, acc, op, (0,))
+
+
+def scan_ref(op, x, *, unit, exclusive=False):
+    flat = x.reshape(-1)
+    incl = jax.lax.associative_scan(op, flat)
+    if exclusive:
+        incl = jnp.concatenate(
+            [jnp.full((1,), unit, x.dtype), incl[:-1]]
+        )
+    return incl.reshape(x.shape)
+
+
+def sort_ref(keys, *, descending=False):
+    out = jnp.sort(keys)
+    return out[::-1] if descending else out
+
+
+def sort_kv_ref(keys, vals, *, tie_break=False):
+    if tie_break:
+        order = jnp.lexsort((vals, keys))
+    else:
+        order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]
+
+
+def argsort_ref(keys):
+    return jnp.argsort(keys, stable=True)
+
+
+def searchsorted_ref(hay, queries, *, side="left"):
+    return jnp.searchsorted(hay, queries, side=side).astype(jnp.int32)
+
+
+def minmax_histogram_ref(x, nbins, lo, hi):
+    xf = x.reshape(-1).astype(jnp.float32)
+    width = jnp.maximum((jnp.float32(hi) - jnp.float32(lo)) / nbins, 1e-30)
+    b = jnp.clip(((xf - lo) / width).astype(jnp.int32), 0, nbins - 1)
+    hist = jnp.zeros((nbins,), jnp.int32).at[b].add(1)
+    return hist, jnp.min(x), jnp.max(x)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Oracle for the fused attention kernel: plain softmax attention.
+    q: (BH, Sq, hd); k, v: (BH, Sk, hd)."""
+    import math
+
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Sk = s.shape[-2:]
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,95 @@
+"""``accumulate`` — prefix scan with the decoupled-lookback insight, TPU-native.
+
+AK.jl implements Merrill & Garland's *single-pass prefix scan with decoupled
+look-back*: each GPU workgroup publishes a block aggregate, then spins,
+inspecting predecessors' status flags until it can resolve its exclusive
+prefix.  The whole mechanism exists because CUDA thread blocks execute in an
+UNDEFINED order.
+
+A TPU TensorCore executes its Pallas grid **sequentially and in order** —
+the "look-back" therefore degenerates to an exact carry held in VMEM scratch
+across grid steps.  Zero flags, zero spinning, still a single pass over HBM:
+the paper's insight (one read of the data, no second global pass) survives;
+the GPU mechanism evaporates.  This is the canonical hardware adaptation in
+this repo (DESIGN.md §2).
+
+Within a block the scan is computed on the 2-D (8, 1024) layout without any
+flat reshape: a row-wise scan (length-1024 log-tree along lanes) plus a
+broadcasted carry of row totals — i.e. the classic scan-of-scans, laid out
+for the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common as C
+
+
+def _row_scan(op, block):
+    """Inclusive scan along the last axis via a Hillis–Steele log-tree.
+
+    (R, L) -> (R, L); L must be a power of two. Shifts are expressed with
+    pad+slice (lane-aligned ops), not gathers.
+    """
+    r, l = block.shape
+    out = block
+    shift = 1
+    while shift < l:
+        shifted = jnp.pad(out, ((0, 0), (shift, 0)))[:, :l]
+        # pad introduces zeros; only combine where a predecessor exists
+        lane = jax.lax.broadcasted_iota(jnp.int32, (r, l), 1)
+        out = jnp.where(lane >= shift, op(out, shifted), out)
+        shift *= 2
+    return out
+
+
+def _scan_body(op, unit, reverse_rows, x_ref, o_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.full(carry_ref.shape, unit, carry_ref.dtype)
+
+    x = x_ref[...]  # (BLOCK_ROWS, BLOCK_COLS)
+    rows = _row_scan(op, x)  # inclusive per-row
+    # Exclusive carry per row = op-scan of previous rows' totals.
+    totals = rows[:, -1]  # (BLOCK_ROWS,)
+    row_carry = []
+    acc = carry_ref[0, 0]
+    for r in range(x.shape[0]):
+        row_carry.append(acc)
+        acc = op(acc, totals[r])
+    row_carry = jnp.stack(row_carry)  # (BLOCK_ROWS,)
+    o_ref[...] = op(rows, row_carry[:, None])
+    carry_ref[0, 0] = acc
+
+
+def scan_blocks(op, x: jax.Array, *, unit, exclusive: bool = False) -> jax.Array:
+    """Inclusive (or exclusive) prefix scan of flat ``x`` under ``op``.
+
+    ``unit`` is the identity of ``op`` (pads the tail; seeds the carry).
+    """
+    shape, n = x.shape, x.size
+    view, _ = C.as_blocks(x, fill=jnp.asarray(unit, x.dtype))
+    rows = view.shape[0]
+    grid = (rows // C.BLOCK_ROWS,)
+    spec = pl.BlockSpec((C.BLOCK_ROWS, C.BLOCK_COLS), lambda i: (i, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_scan_body, op, unit, False),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(view.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, 1), x.dtype)],
+        interpret=C.interpret_mode(),
+    )(view)
+    flat = out.reshape(-1)[:n]
+    if exclusive:
+        flat = jnp.concatenate([jnp.full((1,), unit, x.dtype), flat[:-1]])
+    return flat.reshape(shape)

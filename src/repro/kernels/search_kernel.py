@@ -1,0 +1,91 @@
+"""``searchsortedfirst`` / ``searchsortedlast`` — gather-free binary search.
+
+AK.jl runs one binary search per GPU thread.  Binary search is exactly the
+kind of data-dependent addressing the TPU vector unit cannot express (no
+per-lane gather from VMEM) — so we use the order-statistics identity
+
+    searchsortedfirst(hay, q) = #{ h in hay : h <  q }   (0-based insertion)
+    searchsortedlast (hay, q) = #{ h in hay : h <= q }
+
+and compute the counts with a tiled comparison-matrix kernel: the grid walks
+(query-tile × haystack-chunk) cells, each cell ranks a (128, 1) query vreg
+against a (8, 1024) haystack block with a broadcast compare + sum, and the
+sequential grid accumulates chunk partials into the revisited output block.
+Identical results, zero gathers, MXU-free VPU work.  O(N·Q/8192) vreg ops
+instead of O(Q log N) scalar probes — the standard throughput-for-latency
+trade this hardware wants (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common as C
+
+_Q_TILE = 128  # queries per grid row, one lane each
+
+
+def _search_body(strict, n_hay, q_ref, h_ref, o_ref):
+    qi = pl.program_id(0)
+    hj = pl.program_id(1)
+    q = q_ref[...]  # (1, Q_TILE)
+    h = h_ref[...]  # (BLOCK_ROWS, BLOCK_COLS)
+
+    @pl.when(hj == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Mask haystack padding (pad = +max sorts after everything, but equal
+    # keys at type-max would miscount searchsortedlast; mask by index).
+    base = hj * C.BLOCK_ELEMS
+    flat = _flat_index(h.shape) + base
+    valid = flat < n_hay
+    # (H_rows, H_cols, Q) comparison is too big; contract haystack first:
+    # for each query lane, count elements of this chunk < (<=) q.
+    hq = h.reshape(-1, 1)  # (BLOCK_ELEMS, 1)
+    vq = valid.reshape(-1, 1)
+    cmp = (hq < q.reshape(1, -1)) if strict else (hq <= q.reshape(1, -1))
+    counts = jnp.sum(jnp.where(vq, cmp, False).astype(jnp.int32), axis=0)
+    o_ref[...] = o_ref[...] + counts.reshape(1, _Q_TILE)
+
+
+def _flat_index(shape):
+    acc = jax.lax.broadcasted_iota(jnp.int32, shape, 0) * shape[1]
+    return acc + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+
+
+def searchsorted_blocks(
+    hay: jax.Array, queries: jax.Array, *, side: str = "left"
+) -> jax.Array:
+    """0-based insertion indices of ``queries`` into sorted ``hay``.
+
+    side='left'  -> searchsortedfirst (first position keeping order)
+    side='right' -> searchsortedlast  (last position keeping order)
+    """
+    strict = side == "left"
+    n_hay = hay.shape[0]
+    nq = queries.shape[0]
+    if n_hay == 0:
+        return jnp.zeros((nq,), jnp.int32)
+
+    hview, _ = C.as_blocks(hay, fill=C.type_max(hay.dtype))
+    q_pad = C.pad_to(queries, C.round_up(max(nq, 1), _Q_TILE),
+                     C.type_min(queries.dtype))
+    qview = q_pad.reshape(-1, _Q_TILE)
+
+    grid = (qview.shape[0], hview.shape[0] // C.BLOCK_ROWS)
+    out = pl.pallas_call(
+        functools.partial(_search_body, strict, n_hay),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, _Q_TILE), lambda qi, hj: (qi, 0)),
+            pl.BlockSpec((C.BLOCK_ROWS, C.BLOCK_COLS), lambda qi, hj: (hj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, _Q_TILE), lambda qi, hj: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qview.shape, jnp.int32),
+        interpret=C.interpret_mode(),
+    )(qview, hview)
+    return out.reshape(-1)[:nq]

@@ -1,0 +1,326 @@
+"""``merge_sort`` / ``merge_sort_by_key`` / ``sortperm`` — TPU-native sorting.
+
+AK.jl ships a merge sort because its portable layer has no warp shuffles and
+radix sort "requires intrinsics for high performance" (paper §I-B).  The TPU
+portable layer has the same constraint *plus* a vector memory that hates the
+data-dependent branches of a sequential merge path.  The TPU-idiomatic
+equivalent is a **bitonic sorting network**: every compare-exchange step is a
+branch-free reshape + min/max + select over whole (8·k, 1024) vector
+registers, with zero gathers — trading the O(n log n) of merge sort for
+O(n log² n) *perfectly vectorised* work.  (DESIGN.md §2 records this as a
+hardware adaptation; the AK "merge" view survives inside the network — a
+bitonic merge of two sorted runs is exactly `concat(a, reverse(b))` followed
+by the final half-cleaner stages.)
+
+Three kernels:
+  * an in-block kernel applying any list of (k, j) compare-exchange stages
+    to each VMEM-resident block (j < BLOCK elements);
+  * a cross-block kernel applying one (k, j) stage with j >= BLOCK, pairing
+    blocks at distance j/BLOCK via BlockSpec index maps (the "grid is the
+    network wiring" trick — no data movement besides the two blocks);
+  * key/value variants of both, used by ``sortperm`` (values = iota) and
+    ``merge_sort_by_key``.
+
+Direction bits come from broadcasted iotas over the *global* flat index —
+``asc = ((i & k) == 0)`` — so every stage is oblivious (data-independent),
+which is also what makes the multi-device SIHSort composition deterministic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common as C
+
+# Block geometry: (8, 1024) = 8192 elements (a power of two, as the network
+# requires). f32 keys + i32 values + network temporaries ≈ a few hundred KiB
+# of VMEM — comfortable.
+SORT_ROWS = 8
+SORT_COLS = 1024
+SORT_BLOCK = SORT_ROWS * SORT_COLS
+
+
+def _flat_iota(shape, mults):
+    """Global flat index tensor: sum_i iota_axis_i * mults[i]."""
+    acc = None
+    for ax, m in enumerate(mults):
+        io = jax.lax.broadcasted_iota(jnp.int32, shape, ax) * m
+        acc = io if acc is None else acc + io
+    return acc
+
+
+def _cx(keys, vals, j, k, base, tie_break):
+    """One compare-exchange stage at distance ``j`` (< block size) on a
+    (R, L) block whose first element has global flat index ``base``.
+
+    Returns the exchanged (keys, vals). ``vals`` may be None (key-only).
+    ``asc`` per pair = ((global index of the low element) & k) == 0.
+    """
+    R, L = keys.shape
+
+    def pairs(x, f):
+        if j < L:
+            y = x.reshape(R, L // (2 * j), 2, j)
+            a, b = y[:, :, 0, :], y[:, :, 1, :]
+            na, nb = f(a, b)
+            return jnp.stack([na, nb], axis=2).reshape(R, L)
+        m = j // L
+        y = x.reshape(R // (2 * m), 2, m, L)
+        a, b = y[:, 0], y[:, 1]
+        na, nb = f(a, b)
+        return jnp.stack([na, nb], axis=1).reshape(R, L)
+
+    # Flat global index of each "a" (low) slot.
+    if j < L:
+        ashape = (R, L // (2 * j), j)
+        flat_a = _flat_iota(ashape, (L, 2 * j, 1)) + base
+    else:
+        m = j // L
+        ashape = (R // (2 * m), m, L)
+        flat_a = _flat_iota(ashape, (2 * m * L, L, 1)) + base
+    asc = (flat_a & k) == 0
+
+    if vals is None:
+        def f(a, b):
+            lo, hi = jnp.minimum(a, b), jnp.maximum(a, b)
+            return jnp.where(asc, lo, hi), jnp.where(asc, hi, lo)
+
+        return pairs(keys, f), None
+
+    # Key-value: one swap predicate drives both planes, with optional
+    # (key, value)-lexicographic tie-break (used by sortperm so ties resolve
+    # to ascending index == stable argsort order).
+    def pairs_kv(xk, xv):
+        if j < L:
+            yk = xk.reshape(R, L // (2 * j), 2, j)
+            yv = xv.reshape(R, L // (2 * j), 2, j)
+            ak, bk = yk[:, :, 0, :], yk[:, :, 1, :]
+            av, bv = yv[:, :, 0, :], yv[:, :, 1, :]
+            stack_ax = 2
+        else:
+            m = j // L
+            yk = xk.reshape(R // (2 * m), 2, m, L)
+            yv = xv.reshape(R // (2 * m), 2, m, L)
+            ak, bk = yk[:, 0], yk[:, 1]
+            av, bv = yv[:, 0], yv[:, 1]
+            stack_ax = 1
+        gt = ak > bk
+        if tie_break:
+            gt = gt | ((ak == bk) & (av > bv))
+        swap = jnp.where(asc, gt, ~gt)
+        nak = jnp.where(swap, bk, ak)
+        nbk = jnp.where(swap, ak, bk)
+        nav = jnp.where(swap, bv, av)
+        nbv = jnp.where(swap, av, bv)
+        ok = jnp.stack([nak, nbk], axis=stack_ax).reshape(R, L)
+        ov = jnp.stack([nav, nbv], axis=stack_ax).reshape(R, L)
+        return ok, ov
+
+    return pairs_kv(keys, vals)
+
+
+def _inblock_body(stages, tie_break, has_vals, *refs):
+    """Apply ``stages`` = [(k, j), ...] (all j < SORT_BLOCK) to each block."""
+    b = pl.program_id(0)
+    base = b * SORT_BLOCK
+    if has_vals:
+        k_ref, v_ref, ok_ref, ov_ref = refs
+        keys, vals = k_ref[...], v_ref[...]
+    else:
+        k_ref, ok_ref = refs
+        keys, vals = k_ref[...], None
+    for (k, j) in stages:
+        keys, vals = _cx(keys, vals, j, k, base, tie_break)
+    ok_ref[...] = keys
+    if has_vals:
+        ov_ref[...] = vals
+
+
+def _cross_body(k, j, tie_break, has_vals, *refs):
+    """One (k, j) stage with j a multiple of SORT_BLOCK: elementwise
+    compare-exchange between two whole blocks. Direction is constant across
+    the pair because all local bits sit below j < k."""
+    p = pl.program_id(0)
+    m = j // SORT_BLOCK
+    first = (p // m) * (2 * m) + (p % m)
+    asc = ((first * SORT_BLOCK) & k) == 0
+    if has_vals:
+        ak_r, av_r, bk_r, bv_r, oak, oav, obk, obv = refs
+        ak, av, bk, bv = ak_r[...], av_r[...], bk_r[...], bv_r[...]
+        gt = ak > bk
+        if tie_break:
+            gt = gt | ((ak == bk) & (av > bv))
+        swap = jnp.where(asc, gt, ~gt)
+        oak[...] = jnp.where(swap, bk, ak)
+        obk[...] = jnp.where(swap, ak, bk)
+        oav[...] = jnp.where(swap, bv, av)
+        obv[...] = jnp.where(swap, av, bv)
+    else:
+        ak_r, bk_r, oak, obk = refs
+        ak, bk = ak_r[...], bk_r[...]
+        lo, hi = jnp.minimum(ak, bk), jnp.maximum(ak, bk)
+        oak[...] = jnp.where(asc, lo, hi)
+        obk[...] = jnp.where(asc, hi, lo)
+
+
+def _stages_upto_block(k):
+    """All in-block j stages for a given k: j = min(k//2, BLOCK//2) .. 1."""
+    j = min(k // 2, SORT_BLOCK // 2)
+    out = []
+    while j >= 1:
+        out.append((k, j))
+        j //= 2
+    return out
+
+
+def _block_spec():
+    return pl.BlockSpec((SORT_ROWS, SORT_COLS), lambda i: (i, 0))
+
+
+def _pair_specs(m):
+    first = lambda p: (p // m) * (2 * m) + (p % m)
+    a = pl.BlockSpec((SORT_ROWS, SORT_COLS), lambda p: (first(p), 0))
+    b = pl.BlockSpec((SORT_ROWS, SORT_COLS), lambda p: (first(p) + m, 0))
+    return a, b
+
+
+def _run_inblock(stages, keys2d, vals2d, tie_break, n_blocks):
+    has_vals = vals2d is not None
+    specs = [_block_spec()] * (2 if has_vals else 1)
+    outs = (
+        [jax.ShapeDtypeStruct(keys2d.shape, keys2d.dtype)]
+        + ([jax.ShapeDtypeStruct(vals2d.shape, vals2d.dtype)] if has_vals else [])
+    )
+    res = pl.pallas_call(
+        functools.partial(_inblock_body, stages, tie_break, has_vals),
+        grid=(n_blocks,),
+        in_specs=specs,
+        out_specs=specs if has_vals else specs[0],
+        out_shape=outs if has_vals else outs[0],
+        interpret=C.interpret_mode(),
+    )(*([keys2d, vals2d] if has_vals else [keys2d]))
+    return res if has_vals else (res, None)
+
+
+def _run_cross(k, j, keys2d, vals2d, tie_break, n_blocks):
+    has_vals = vals2d is not None
+    m = j // SORT_BLOCK
+    sa, sb = _pair_specs(m)
+    if has_vals:
+        in_specs = [sa, sa, sb, sb]
+        out_specs = [sa, sa, sb, sb]
+        out_shape = [
+            jax.ShapeDtypeStruct(keys2d.shape, keys2d.dtype),
+            jax.ShapeDtypeStruct(vals2d.shape, vals2d.dtype),
+        ] * 2
+        args = [keys2d, vals2d, keys2d, vals2d]
+    else:
+        in_specs = [sa, sb]
+        out_specs = [sa, sb]
+        out_shape = [jax.ShapeDtypeStruct(keys2d.shape, keys2d.dtype)] * 2
+        args = [keys2d, keys2d]
+    res = pl.pallas_call(
+        functools.partial(_cross_body, k, j, tie_break, has_vals),
+        grid=(n_blocks // 2,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=C.interpret_mode(),
+    )(*args)
+    if has_vals:
+        ka, va, kb, vb = res
+        # ka and kb each hold updated halves written through disjoint block
+        # maps of the SAME logical array; merge by recombining: both outputs
+        # cover the full array but only their mapped blocks are meaningful.
+        keys = _merge_pair_halves(ka, kb, m)
+        vals = _merge_pair_halves(va, vb, m)
+        return keys, vals
+    ka, kb = res
+    return _merge_pair_halves(ka, kb, m), None
+
+
+def _merge_pair_halves(a, b, m):
+    """Outputs of the cross kernel: ``a`` holds the updated 'first' blocks,
+    ``b`` the 'second' blocks; non-mapped blocks are untouched padding.
+    Recombine by selecting per block: block index g is a 'first' iff
+    (g // m) is even."""
+    rows = a.shape[0]
+    n_blocks = rows // SORT_ROWS
+    g = jnp.arange(n_blocks) // m
+    is_first = (g % 2) == 0
+    sel = jnp.repeat(is_first, SORT_ROWS)[:, None]
+    return jnp.where(sel, a, b)
+
+
+def _prepare(keys, vals, pad_key):
+    n = keys.shape[0]
+    total = max(C.next_pow2(n), SORT_BLOCK)
+    keys_p = C.pad_to(keys, total, pad_key)
+    view_k = keys_p.reshape(-1, SORT_COLS)
+    view_v = None
+    if vals is not None:
+        pad_v = C.type_max(vals.dtype)
+        view_v = C.pad_to(vals, total, pad_v).reshape(-1, SORT_COLS)
+    return view_k, view_v, total
+
+
+def bitonic_sort(keys: jax.Array, *, descending: bool = False) -> jax.Array:
+    """Full sort of a 1-D array via the blocked bitonic network."""
+    n = keys.shape[0]
+    if n == 0:
+        return keys
+    pad = C.type_max(keys.dtype)
+    k2d, _, total = _prepare(keys, None, pad)
+    n_blocks = total // SORT_BLOCK
+    k2d, _ = _sort_network(k2d, None, total, n_blocks, tie_break=False)
+    out = k2d.reshape(-1)[:n]
+    return out[::-1] if descending else out
+
+
+def bitonic_sort_kv(
+    keys: jax.Array, vals: jax.Array, *, tie_break: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Sort (keys, vals) pairs by key. ``tie_break=True`` orders equal keys
+    by ascending value (making index payloads reproduce a stable argsort)."""
+    n = keys.shape[0]
+    if n == 0:
+        return keys, vals
+    pad = C.type_max(keys.dtype)
+    k2d, v2d, total = _prepare(keys, vals, pad)
+    n_blocks = total // SORT_BLOCK
+    k2d, v2d = _sort_network(k2d, v2d, total, n_blocks, tie_break=tie_break)
+    return k2d.reshape(-1)[:n], v2d.reshape(-1)[:n]
+
+
+def _sort_network(k2d, v2d, total, n_blocks, tie_break):
+    # Phase 1: every stage with k <= SORT_BLOCK is in-block for all blocks
+    # (the block base b*SORT_BLOCK contributes nothing to (i & k)).
+    stages = []
+    k = 2
+    while k <= min(total, SORT_BLOCK):
+        stages.extend(_stages_upto_block(k))
+        k *= 2
+    k2d, v2d = _run_inblock(stages, k2d, v2d, tie_break, n_blocks)
+    # Phase 2: k > SORT_BLOCK — cross-block j stages then one in-block finish.
+    while k <= total:
+        j = k // 2
+        while j >= SORT_BLOCK:
+            k2d, v2d = _run_cross(k, j, k2d, v2d, tie_break, n_blocks)
+            j //= 2
+        k2d, v2d = _run_inblock(_stages_upto_block_finish(k), k2d, v2d,
+                                tie_break, n_blocks)
+        k *= 2
+    return k2d, v2d
+
+
+def _stages_upto_block_finish(k):
+    """In-block finishing stages for k > SORT_BLOCK: j = BLOCK/2 .. 1."""
+    out = []
+    j = SORT_BLOCK // 2
+    while j >= 1:
+        out.append((k, j))
+        j //= 2
+    return out

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count at first
+init, and the production meshes need 512 host placeholders.
+
+Per cell this driver:
+  1. builds the exact assigned config and its ShapeDtypeStruct inputs,
+  2. jits the right step (train_step for train shapes; forward for
+     prefill; decode_step for decode/long) with full in/out shardings,
+  3. ``.lower(...)`` then ``.compile()`` — success proves the sharding
+     configuration is coherent (no mismatched specs, no unsupported
+     collectives, static memory accounted),
+  4. records ``memory_analysis()`` / ``cost_analysis()`` and the
+     collective-byte schedule parsed from the compiled HLO into a JSON
+     blob that benchmarks/roofline.py and EXPERIMENTS.md consume.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single \
+        [--arch glm4_9b] [--shape train_4k] [--out results/dryrun]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base as CB
+from repro.launch import mesh as MESH
+from repro.launch.train import jitted_train_step, shardings_for
+from repro.models import model as M
+from repro.models import sharding as SH
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2,
+}
+
+
+def _hlo_type_bytes(txt: str) -> int:
+    """Bytes of one HLO type string like 'bf16[128,4096]{1,0}'."""
+    m = _SHAPE_RE.search(txt)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in (compiled) HLO text."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match 'xyz = bf16[...] all-gather(...)' — the op name after '='
+        m = re.search(r"=\s*(\(?[a-z0-9\[\],{}\s]*\)?)\s*([a-z\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        for c in COLLECTIVES:
+            if op == c or op == c + "-start":
+                # operand types: parse the result type(s) as proxy for moved
+                # bytes (result of all-gather = gathered bytes, of
+                # all-reduce = reduced tensor, of all-to-all = exchanged)
+                out[c] += _hlo_type_bytes(m.group(1))
+                counts[c] += 1
+    return {"bytes": out, "counts": counts}
+
+
+def lower_cell(arch: str, shape_name, mesh, *, use_ep=True, cfg=None):
+    """Returns (record dict). Raises on failure.
+
+    ``cfg``: optional config override (roofline.py lowers depth-L and
+    depth-L+1 variants to recover per-layer costs — XLA's cost_analysis
+    counts ``while`` bodies once, not x trip count).
+    ``shape_name`` may be a SHAPES key or a dict override (roofline's
+    reduced-sequence fits)."""
+    cfg = cfg or CB.load_config(arch)
+    sdict = (CB.SHAPES[shape_name] if isinstance(shape_name, str)
+             else shape_name)
+    kind = sdict["kind"]
+    B = sdict["batch"]
+    specs = CB.input_specs(cfg, shape_name)
+    dp = SH.dp_axes_of(mesh)
+    tp_size = mesh.shape["model"]
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+
+    pshard, oshard, bshard, pshapes = shardings_for(
+        cfg, mesh, kind, batch_size=B
+    )
+
+    if kind == "train":
+        from repro.optim import adamw_init
+
+        step = jitted_train_step(cfg, mesh, use_ep=use_ep and
+                                 cfg.family == "moe")
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        lowered = step.lower(pshapes, oshapes, specs)
+    elif kind == "prefill":
+        def fwd(params, batch):
+            with SH.mesh_context(mesh):
+                logits, aux = M.forward(
+                    params, cfg, batch["tokens"],
+                    frames=batch.get("frames"), patches=batch.get("patches"),
+                    mesh=mesh, dp_axes=dp,
+                    use_ep=use_ep and cfg.family == "moe",
+                )
+            return logits, aux
+        logits_spec = P(dp, None, "model")
+        step = jax.jit(
+            fwd,
+            in_shardings=(pshard, bshard),
+            out_shardings=(SH.named(mesh, logits_spec), SH.named(mesh, P())),
+        )
+        lowered = step.lower(pshapes, specs)
+    else:  # decode
+        def dec(params, tokens, position, caches):
+            with SH.mesh_context(mesh):
+                return M.decode_step(params, cfg, tokens, caches, position)
+        seq_shard = B % dp_total != 0
+        logits_spec = (
+            P(None, None, "model") if seq_shard else P(dp, None, "model")
+        )
+        step = jax.jit(
+            dec,
+            in_shardings=(
+                pshard, bshard["tokens"], bshard["position"],
+                bshard["caches"],
+            ),
+            out_shardings=(
+                SH.named(mesh, logits_spec), bshard["caches"]
+            ),
+            donate_argnums=(3,),
+        )
+        lowered = step.lower(
+            pshapes, specs["tokens"], specs["position"], specs["caches"]
+        )
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = collective_bytes(hlo)
+
+    n_dev = 1
+    for a in mesh.axis_names:
+        n_dev *= mesh.shape[a]
+    record = {
+        "arch": arch,
+        "shape": shape_name if isinstance(shape_name, str) else dict(sdict),
+        "kind": kind,
+        "mesh": dict(zip(mesh.axis_names, [mesh.shape[a] for a in
+                                           mesh.axis_names])),
+        "devices": n_dev,
+        "compile_s": round(compile_s, 2),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "collectives": coll,
+    }
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--include-skipped", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", MESH.make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", MESH.make_production_mesh(multi_pod=True)))
+
+    cells = CB.cells(include_skipped=False)
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+
+    failures = 0
+    for mesh_name, mesh in meshes:
+        for arch, shape_name, _ in cells:
+            tag = f"{arch}.{shape_name}.{mesh_name}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (cached)")
+                continue
+            try:
+                rec = lower_cell(arch, shape_name, mesh)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(
+                    f"[ok]   {tag}  compile={rec['compile_s']}s "
+                    f"flops={rec['flops']:.3e} "
+                    f"coll={sum(rec['collectives']['bytes'].values()):.3e}B"
+                )
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+    # skipped cells are recorded for the table
+    for arch, shape_name, skipped in CB.cells(include_skipped=True):
+        if skipped:
+            print(f"[skipped-by-design] {arch}.{shape_name} "
+                  f"(quadratic attention at 500k ctx; DESIGN.md §6)")
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Axes: ``data`` (DP + FSDP), ``model`` (TP/EP), and ``pod`` (the cross-pod DP
+domain — its collectives cross the slower DCN/through-host interconnect,
+exactly the paper's GPUDirect-vs-host distinction, see Fig 2-5 mapping in
+DESIGN.md §2).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (device count is locked at first jax init — the dry-run sets
+XLA_FLAGS before importing anything).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smokes)."""
+    n = len(jax.devices())
+    data = min(data, n // model) or 1
+    return jax.make_mesh(
+        (data, model),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

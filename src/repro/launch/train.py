@@ -1,0 +1,209 @@
+"""Training driver: jitted sharded train step + fault-tolerant loop.
+
+``make_train_step``   — pure step: (params, opt, batch) -> (params', opt',
+                        metrics), with optional gradient-accumulation
+                        microbatching (k sequential grad computations whose
+                        DP all-reduces overlap the next microbatch's
+                        backward under XLA's latency-hiding scheduler).
+``jitted_train_step`` — wraps it in jax.jit with full in/out shardings
+                        (params+optimizer FSDP×TP, batch DP) and buffer
+                        donation. This exact object is what the dry-run
+                        lowers for every (arch × train shape × mesh).
+``main``              — CPU-scale end-to-end loop with checkpointing,
+                        supervisor retries and straggler accounting
+                        (examples/train_moe.py drives it).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.models import sharding as SH
+from repro.optim import AdamWState, adamw_init, adamw_update
+
+
+def make_train_step(cfg, mesh, *, use_ep=True, lr=3e-4, accum_steps=1,
+                    aux_weight=0.01):
+    dp = SH.dp_axes_of(mesh) if mesh is not None else ("data",)
+
+    def loss_of(params, batch):
+        return M.loss_fn(
+            params, cfg, batch["tokens"], batch["labels"],
+            frames=batch.get("frames"), patches=batch.get("patches"),
+            mesh=mesh, dp_axes=dp, use_ep=use_ep, aux_weight=aux_weight,
+        )
+
+    def train_step(params, opt, batch):
+        ctx = SH.mesh_context(mesh) if mesh is not None else None
+        if ctx is not None:
+            ctx.__enter__()
+        if accum_steps == 1:
+            (loss, (ce, aux)), grads = jax.value_and_grad(
+                loss_of, has_aux=True
+            )(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, (ce, aux)), g = jax.value_and_grad(
+                    loss_of, has_aux=True
+                )(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), (ce, aux)
+
+            micro_batch = jax.tree.map(
+                lambda x: x.reshape(
+                    (accum_steps, x.shape[0] // accum_steps) + x.shape[1:]
+                ),
+                batch,
+            )
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), (ces, auxs) = jax.lax.scan(
+                micro, (zeros, jnp.float32(0.0)), micro_batch
+            )
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss, ce, aux = loss / accum_steps, ces.mean(), auxs.mean()
+        new_params, new_opt, gnorm = adamw_update(
+            params, grads, opt, lr=lr
+        )
+        if ctx is not None:
+            ctx.__exit__(None, None, None)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, "gnorm": gnorm}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def shardings_for(cfg, mesh, kind="train", *, batch_size=None):
+    """(param, opt, batch, metric) NamedSharding trees for this mesh."""
+    dp = SH.dp_axes_of(mesh)
+    fsdp = dp  # FSDP over the full DP domain
+    tp_size = mesh.shape["model"]
+    params_shapes = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    pspecs = SH.param_spec_tree(params_shapes, cfg, fsdp=fsdp)
+    opt_specs = AdamWState(step=P(), m=pspecs, v=pspecs)
+    bspecs = SH.batch_spec_tree(
+        cfg, kind, dp=dp, tp_size=tp_size, batch_size=batch_size,
+        dp_total=int(jnp.prod(jnp.array([mesh.shape[a] for a in dp]))),
+    )
+    named = lambda t: SH.named(mesh, t)
+    return named(pspecs), named(opt_specs), named(bspecs), params_shapes
+
+
+def jitted_train_step(cfg, mesh, *, use_ep=True, lr=3e-4, accum_steps=1,
+                      donate=True):
+    pshard, oshard, bshard, _ = shardings_for(cfg, mesh, "train")
+    metric_shard = {
+        k: SH.named(mesh, P()) for k in ("loss", "ce", "aux", "gnorm")
+    }
+    step = make_train_step(
+        cfg, mesh, use_ep=use_ep, lr=lr, accum_steps=accum_steps
+    )
+    return jax.jit(
+        step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, metric_shard),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def init_sharded(cfg, mesh, seed=0):
+    """Params + optimizer, created directly in their target shardings."""
+    pshard, oshard, _, _ = shardings_for(cfg, mesh, "train")
+    p_init = jax.jit(
+        lambda k: M.init_params(k, cfg), out_shardings=pshard
+    )(jax.random.PRNGKey(seed))
+    o_init = jax.jit(adamw_init, out_shardings=oshard)(p_init)
+    return p_init, o_init
+
+
+# ---------------------------------------------------------------------------
+# CPU-scale end-to-end loop (fault-tolerant)
+# ---------------------------------------------------------------------------
+
+
+def train_loop(cfg, mesh, *, steps, batch, seq, lr=3e-4, use_ep=False,
+               ckpt_dir=None, ckpt_every=50, accum_steps=1, log=print):
+    from repro import ckpt as CK
+    from repro.data import SyntheticCorpus
+    from repro.runtime import StragglerMonitor, Supervisor
+
+    params, opt = init_sharded(cfg, mesh)
+    step_fn = jitted_train_step(
+        cfg, mesh, use_ep=use_ep, lr=lr, accum_steps=accum_steps
+    )
+    corpus = SyntheticCorpus(cfg.vocab, seq)
+    writer = CK.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    sup = Supervisor(step_fn, data_axis=mesh.shape.get("data", 1),
+                     model_axis=mesh.shape.get("model", 1))
+    mon = StragglerMonitor(n_hosts=1)
+
+    start = 0
+    if ckpt_dir and CK.latest_step(ckpt_dir) is not None:
+        pshard, oshard, _, _ = shardings_for(cfg, mesh, "train")
+        (params, opt), start = CK.restore(
+            ckpt_dir, (params, opt), shardings=(pshard, oshard)
+        )
+        log(f"restored checkpoint at step {start}")
+
+    losses = []
+    for i in range(start, steps):
+        toks, labels = corpus.batch(i, batch)
+        b = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+        if cfg.family == "encdec":
+            b["frames"] = jnp.zeros((batch, cfg.enc_seq, cfg.d_model),
+                                    cfg.dtype)
+        if cfg.family == "vlm":
+            b["patches"] = jnp.zeros((batch, cfg.vision_seq, cfg.d_model),
+                                     cfg.dtype)
+        t0 = time.perf_counter()
+        params, opt, metrics = sup.run_step(params, opt, b)
+        mon.record(0, time.perf_counter() - t0)
+        losses.append(float(metrics["loss"]))
+        if i % 10 == 0 or i == steps - 1:
+            log(
+                f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                f"ce {float(metrics['ce']):.4f} gnorm "
+                f"{float(metrics['gnorm']):.3f}"
+            )
+        if writer and (i + 1) % ckpt_every == 0:
+            writer.save((params, opt), i + 1)
+    if writer:
+        writer.save((params, opt), steps)
+        writer.wait()
+    return losses
+
+
+def main(argv=None):
+    from repro.configs import load_smoke_config
+    from repro.launch.mesh import make_host_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_moe_1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--accum-steps", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = load_smoke_config(args.arch)
+    mesh = make_host_mesh()
+    losses = train_loop(
+        cfg, mesh, steps=args.steps, batch=args.batch, seq=args.seq,
+        lr=args.lr, ckpt_dir=args.ckpt_dir, accum_steps=args.accum_steps,
+    )
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

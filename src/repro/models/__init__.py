@@ -1,0 +1,1 @@
+"""Model substrate: layers, families, assembly, train/serve steps."""

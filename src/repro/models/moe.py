@@ -1,0 +1,235 @@
+"""Mixture-of-Experts with AK-sort-based token routing.
+
+This layer is the paper's technique running *inside* the LM: expert dispatch
+is literally a distributed key-sort of (expert_id, token) pairs —
+
+    router top-k            -> ak.topk
+    group tokens by expert  -> ak.sortperm  (stable: preserves token order
+                                             within an expert, which makes
+                                             capacity-dropping deterministic)
+    tokens per expert       -> ak.bincount  (histogram)
+    expert buffer offsets   -> ak.accumulate (exclusive scan)
+    cross-device exchange   -> capacity-padded lax.all_to_all — the same
+                               fixed-capacity idiom as core.distributed.sihsort
+
+Two execution modes:
+  * ``moe_ffn``     — single-program (pjit/GSPMD) path: dispatch via gather/
+    scatter on the global token axis. Used by smoke tests and small meshes.
+  * ``moe_ffn_ep``  — shard_map expert-parallel path: tokens sequence-sharded
+    over the ``model`` axis, experts sharded over the same axis, dispatch via
+    all_to_all (DeepSpeed-MoE-style EP mapped to TPU collectives).
+
+Both are differentiable (gather/scatter/all_to_all all have transposes) and
+return the router load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as ak
+from repro.models import layers as L
+from repro.models import sharding as SH
+
+
+def moe_init(rng, cfg):
+    """Router + stacked expert weights (+ optional shared experts)."""
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 5)
+    scale = 1.0 / jnp.sqrt(d)
+
+    def experts_w(key, a, b):
+        w = jax.random.uniform(key, (E, a, b), jnp.float32, -1.0, 1.0) * scale
+        return w.astype(cfg.dtype)
+
+    p = {
+        "router": L.dense_init(ks[0], d, E, jnp.float32),
+        "w_gate": experts_w(ks[1], d, ff),
+        "w_up": experts_w(ks[2], d, ff),
+        "w_down": experts_w(ks[3], ff, d),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.swiglu_init(
+            ks[4], d, ff * cfg.n_shared_experts, cfg.dtype
+        )
+    return p
+
+
+def _route(p, cfg, x_flat):
+    """Router: returns (ids (T,k), gates (T,k), occupancy (E,), importance
+    (E,)). Switch-style balance loss = E * sum_e occupancy_e * importance_e
+    — EP callers pmean the two factors BEFORE the product so the local and
+    global estimators agree exactly."""
+    logits = (x_flat.astype(jnp.float32)) @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, ids = ak.topk(probs, cfg.top_k)  # paper primitive: topk
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    T = x_flat.shape[0]
+    occupancy = ak.bincount(ids.reshape(-1), cfg.n_experts).astype(
+        jnp.float32
+    ) / (T * cfg.top_k)
+    importance = jnp.mean(probs, axis=0)
+    return ids, gate_vals.astype(x_flat.dtype), occupancy, importance
+
+
+def _aux_loss(cfg, occupancy, importance):
+    return cfg.n_experts * jnp.sum(occupancy * importance)
+
+
+def _expert_ffn(p, xe, constrain=False):
+    """xe: (E, C, d) -> (E, C, d), batched over experts (EP-shardable).
+
+    ``constrain``: auto-sharded path — gather the FSDP dim of the expert
+    stacks at use (experts stay sharded over ``model``)."""
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    if constrain:
+        wg = SH.gather_weight(wg, "model", None, None)
+        wu = SH.gather_weight(wu, "model", None, None)
+        wd = SH.gather_weight(wd, "model", None, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _dispatch_indices(cfg, ids, T, capacity):
+    """The AK-primitive routing core: sort (expert, token) pairs and assign
+    capacity slots. Returns (perm, slot, keep) over the (T*k,) flat axis."""
+    k = cfg.top_k
+    flat_ids = ids.reshape(-1)  # (T*k,)
+    perm = ak.sortperm(flat_ids)  # stable sort by expert — AK sortperm
+    sorted_ids = flat_ids[perm]
+    counts = ak.bincount(flat_ids, cfg.n_experts)  # AK histogram
+    offsets = ak.accumulate(
+        jnp.add, counts, init=jnp.int32(0), inclusive=False
+    )  # AK exclusive scan
+    pos_in_expert = jnp.arange(T * k, dtype=jnp.int32) - offsets[sorted_ids]
+    keep = pos_in_expert < capacity
+    slot = sorted_ids * capacity + jnp.minimum(pos_in_expert, capacity - 1)
+    return perm, slot, keep, sorted_ids
+
+
+def moe_ffn(p, cfg, x, *, capacity_factor=None):
+    """Single-program MoE FFN. x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    k = cfg.top_k
+    cf = capacity_factor or cfg.moe_capacity_factor
+    capacity = max(int(T * k * cf / cfg.n_experts), 4)
+
+    xf = x.reshape(T, d)
+    ids, gates, occ, imp = _route(p, cfg, xf)
+    aux = _aux_loss(cfg, occ, imp)
+    perm, slot, keep, _ = _dispatch_indices(cfg, ids, T, capacity)
+
+    token_of = perm // k  # which token each sorted (token,choice) belongs to
+    gate_of = gates.reshape(-1)[perm]
+
+    # scatter tokens into (E*C, d) expert buffers (dropped tokens masked)
+    buf = jnp.zeros((cfg.n_experts * capacity, d), x.dtype)
+    src = jnp.where(keep[:, None], xf[token_of], 0)
+    buf = buf.at[jnp.where(keep, slot, cfg.n_experts * capacity - 1)].add(
+        jnp.where(keep[:, None], src, 0)
+    )
+    ye = _expert_ffn(p, buf.reshape(cfg.n_experts, capacity, d),
+                     constrain=True)
+    ye = ye.reshape(cfg.n_experts * capacity, d)
+
+    # combine: gather each kept (token, choice) result, weight, scatter-add
+    out = jnp.zeros((T, d), x.dtype)
+    contrib = jnp.where(keep[:, None], ye[slot] * gate_of[:, None], 0)
+    out = out.at[token_of].add(contrib)
+
+    if cfg.n_shared_experts:
+        out = out + L.swiglu(p["shared"], xf)
+    return out.reshape(B, S, d), aux
+
+
+def moe_ffn_ep(
+    p, cfg, x, *, mesh, dp_axes=("data",), ep_axis="model",
+    capacity_factor=None
+):
+    """Expert-parallel MoE via shard_map: tokens sequence-sharded over the
+    EP axis, experts sharded over the EP axis, two all_to_alls per layer.
+
+    x: (B, S, d). S must divide by the EP axis size; expert count too.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    ep = mesh.shape[ep_axis]
+    E_local = cfg.n_experts // ep
+    B, S, d = x.shape
+    cf = capacity_factor or cfg.moe_capacity_factor
+
+    p_specs = {
+        "router": P(),
+        "w_gate": P(ep_axis, None, None),
+        "w_up": P(ep_axis, None, None),
+        "w_down": P(ep_axis, None, None),
+    }
+    if cfg.n_shared_experts:
+        p_specs["shared"] = {
+            "w_gate": P(None, ep_axis),
+            "w_up": P(None, ep_axis),
+            "w_down": P(ep_axis, None),
+        }
+    x_spec = P(dp_axes, ep_axis, None)  # sequence-sharded for the MoE block
+
+    def local(pl_, xl):
+        # xl: (B_l, S_l, d) — this device's token slice.
+        # Inside shard_map every mesh axis is manual: the ZeRO-3
+        # gather-at-use constraints (models/sharding.py) must not fire.
+        with SH.mesh_context(None):
+            return _local_body(pl_, xl)
+
+    def _local_body(pl_, xl):
+        Bl, Sl, _ = xl.shape
+        T_l = Bl * Sl
+        k = cfg.top_k
+        capacity = max(int(T_l * k * cf / cfg.n_experts), 4)
+        xf = xl.reshape(T_l, d)
+        ids, gates, occ, imp = _route(pl_, cfg, xf)
+        # pmean the factors first -> exactly the global balance loss
+        for ax in (ep_axis,) + tuple(dp_axes):
+            occ = jax.lax.pmean(occ, ax)
+            imp = jax.lax.pmean(imp, ax)
+        aux = _aux_loss(cfg, occ, imp)
+        perm, slot, keep, _ = _dispatch_indices(cfg, ids, T_l, capacity)
+        token_of = perm // k
+        gate_of = gates.reshape(-1)[perm]
+
+        buf = jnp.zeros((cfg.n_experts * capacity, d), xl.dtype)
+        buf = buf.at[jnp.where(keep, slot, cfg.n_experts * capacity - 1)].add(
+            jnp.where(keep[:, None], xf[token_of], 0)
+        )
+        # (E, C, d) -> exchange so each device gets its local experts' tokens
+        # from every peer: (ep, E_l, C, d) --all_to_all--> same shape, where
+        # leading axis indexes the source peer.
+        buf = buf.reshape(ep, E_local, capacity, d)
+        buf = jax.lax.all_to_all(buf, ep_axis, 0, 0, tiled=False)
+        # buf now (ep, E_l, C, d): [q, e] = tokens from peer q for local
+        # expert e — regroup expert-major for the batched FFN einsum.
+        ye = _expert_ffn(
+            pl_,
+            buf.transpose(1, 0, 2, 3).reshape(E_local, ep * capacity, d),
+        )
+        ye = ye.reshape(E_local, ep, capacity, d).transpose(1, 0, 2, 3)
+        ye = jax.lax.all_to_all(ye, ep_axis, 0, 0, tiled=False)
+        ye = ye.reshape(cfg.n_experts * capacity, d)
+
+        out = jnp.zeros((T_l, d), xl.dtype)
+        contrib = jnp.where(keep[:, None], ye[slot] * gate_of[:, None], 0)
+        out = out.at[token_of].add(contrib)
+        if cfg.n_shared_experts:
+            out = out + L.swiglu(pl_["shared"], xf)
+        return out.reshape(Bl, Sl, d), aux
+
+    y, aux = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(p_specs, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(p, x)
+    return y, aux

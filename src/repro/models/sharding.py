@@ -1,0 +1,250 @@
+"""Sharding rules: parameter, batch and cache PartitionSpecs.
+
+Strategy (DESIGN.md §5):
+  * TP over ``model``: Megatron column/row splits (QKV & up-proj column,
+    out & down-proj row), vocab-sharded embedding + head.
+  * FSDP over ``data`` (+ ``pod`` when present): every matmul weight's
+    non-TP dim is additionally sharded ZeRO-3 style; GSPMD inserts the
+    prefetch all-gathers. Optimizer state inherits the same specs.
+  * EP over ``model``: MoE expert stacks shard their expert dim.
+  * Caches: KV-head dim over ``model`` when divisible, else head_dim
+    (all assigned GQA configs have 128·k fused KV widths, so one of the
+    two always divides); batch over ``data``(+``pod``); SSM state heads
+    over ``model``.
+
+Rules key off the leaf *name* (and the owning subtree for MoE experts);
+leading layer-stacking axes are padded with None automatically, so the
+same table covers scanned stacks and single blocks.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+
+def _name(path):
+    for k in reversed(path):
+        if isinstance(k, DictKey):
+            return str(k.key)
+    return ""
+
+
+def _in_moe(path):
+    return any(isinstance(k, DictKey) and k.key == "moe" for k in path)
+
+
+def _in_shared_expert(path):
+    return any(isinstance(k, DictKey) and k.key == "shared" for k in path)
+
+
+def param_spec_tree(params_like, cfg, *, fsdp, tp="model"):
+    """PartitionSpec pytree matching ``params_like`` (arrays or structs)."""
+
+    def rule(path, leaf):
+        name = _name(path)
+        nd = len(leaf.shape)
+        # shared experts are plain SwiGLU stacks, not (E, ...) expert stacks
+        moe = _in_moe(path) and not _in_shared_expert(path)
+        # --- base spec on the trailing dims -------------------------------
+        if name == "embed":
+            base = (tp, fsdp)
+        elif name == "unembed":
+            base = (fsdp, tp)
+        elif moe and name in ("w_gate", "w_up"):
+            base = (tp, fsdp, None)       # (E, d, ff): experts on TP axis
+        elif moe and name == "w_down":
+            base = (tp, None, fsdp)       # (E, ff, d)
+        elif name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj"):
+            base = (fsdp, tp)
+        elif name in ("wo", "w_down", "out_proj"):
+            base = (tp, fsdp)
+        elif name == "router":
+            base = (fsdp, None)
+        elif name == "conv_w":
+            base = (None, tp)
+        elif name == "conv_b":
+            base = (tp,)
+        else:  # norms, gates, A_log, D, dt_bias, ...
+            base = ()
+        pad = (None,) * (nd - len(base))
+        return P(*(pad + tuple(base)))
+
+    return jax.tree_util.tree_map_with_path(rule, params_like)
+
+
+def _kv_spec(cfg, dp, tp, lead, tp_size=16, seq_shard=False):
+    """Spec for a (…, B, S, KV, hd) cache tensor with ``lead`` leading axes.
+
+    KV heads shard over ``model`` when divisible; otherwise the cache
+    SEQUENCE dim shards over ``model`` (flash-decoding-style: each TP peer
+    owns a context slice and GSPMD all-reduces the online-softmax stats).
+    head_dim sharding is deliberately avoided — GSPMD cannot re-shard
+    (…,KV,hd/16) tensors through the attention reshapes and falls back to
+    involuntary full rematerialisation (measured: §Perf iteration 2).
+
+    ``seq_shard``: long-context mode (global batch smaller than the DP
+    domain, e.g. long_500k at B=1) — the sequence additionally shards over
+    the DP axes instead of batch.
+    """
+    heads_ok = cfg.n_kv_heads and cfg.n_kv_heads % tp_size == 0
+    if seq_shard:
+        tail = ((None, dp, tp, None) if heads_ok
+                else (None, tuple(dp) + (tp,), None, None))
+    else:
+        tail = (dp, None, tp, None) if heads_ok else (dp, tp, None, None)
+    return P(*((None,) * lead + tail))
+
+
+def cache_spec_tree(cfg, *, dp, tp="model", tp_size=16, seq_shard=False):
+    """PartitionSpec pytree matching model.cache_specs structure."""
+    fam = cfg.family
+    bdp = None if seq_shard else dp  # batch dim spec
+
+    def kv(lead):
+        s = _kv_spec(cfg, dp, tp, lead, tp_size, seq_shard)
+        return {"k": s, "v": s}
+
+    if fam in ("dense", "moe"):
+        return {"kv": kv(1)}
+    if fam == "ssm":
+        return {
+            "ssm": P(None, bdp, tp, None, None),
+            "conv": P(None, bdp, None, tp),
+        }
+    if fam == "hybrid":
+        out = {
+            "ssm": P(None, None, bdp, tp, None, None),
+            "conv": P(None, None, bdp, None, tp),
+            "kv": kv(1),
+        }
+        G, gs, tail = _hybrid_shape(cfg)
+        if tail:
+            out["ssm_tail"] = P(None, bdp, tp, None, None)
+            out["conv_tail"] = P(None, bdp, None, tp)
+        return out
+    if fam == "encdec":
+        return {"kv": kv(1), "xkv": kv(1)}
+    if fam == "vlm":
+        return {"kv": kv(2), "xkv": kv(1)}
+    raise ValueError(fam)
+
+
+def _hybrid_shape(cfg):
+    from repro.models.model import _hybrid_shape as h
+
+    return h(cfg)
+
+
+def batch_spec_tree(cfg, kind, *, dp, tp="model", tp_size=16,
+                    batch_size=None, dp_total=None):
+    """Specs for the input batch dict of a given shape kind.
+
+    When ``batch_size`` does not divide over the DP domain (long_500k at
+    B=1), batch dims replicate and caches sequence-shard instead.
+    """
+    seq_shard = (
+        batch_size is not None
+        and dp_total is not None
+        and batch_size % dp_total != 0
+    )
+    toks = P(None, None) if seq_shard else P(dp, None)
+    if kind == "train":
+        out = {"tokens": toks, "labels": toks}
+    elif kind == "prefill":
+        out = {"tokens": toks}
+    else:  # decode
+        out = {
+            "tokens": toks,
+            "position": P(),
+            "caches": cache_spec_tree(cfg, dp=dp, tp=tp, tp_size=tp_size,
+                                      seq_shard=seq_shard),
+        }
+    if kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            out["frames"] = P(dp, None, None)
+        if cfg.family == "vlm":
+            out["patches"] = P(dp, None, None)
+    return out
+
+
+def dp_axes_of(mesh) -> tuple:
+    """The data-parallel axis names of a production mesh."""
+    names = mesh.axis_names
+    return tuple(n for n in names if n in ("pod", "data"))
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-3 weight-gather-at-use constraints
+#
+# Parameters are stored FSDP-sharded: matmul weights carry the DP axes on a
+# dim that the layer matmul CONTRACTS. Left alone, the GSPMD cost model
+# sometimes resolves that conflict by all-gathering the *activations* over
+# the batch axis (measured: 26 GB/step of global-batch logits traffic on
+# whisper train_4k — EXPERIMENTS.md §Perf iteration 3). The ZeRO-3 semantics
+# we want — gather the (small) WEIGHT right before use, keep activations
+# batch-sharded — is forced by a with_sharding_constraint on the weight at
+# its use site. ``mesh_context`` is installed by the step builders
+# (train.py / dryrun.py) at trace time; without it these are no-ops, so
+# layer code stays mesh-free for tests and single-device smokes.
+# ---------------------------------------------------------------------------
+import contextlib
+import threading
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    old = getattr(_ctx, "mesh", None)
+    _ctx.mesh = mesh
+    try:
+        yield
+    finally:
+        _ctx.mesh = old
+
+
+def gather_weight(w, *spec):
+    """Constrain a weight to ``P(*spec)`` at use (no-op without a mesh)."""
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None:
+        return w
+    return jax.lax.with_sharding_constraint(
+        w, NamedSharding(mesh, P(*spec))
+    )
+
+
+def col_parallel(w):
+    """Column-parallel weight (d, out·tp): gather FSDP dims, keep TP."""
+    return gather_weight(w, None, "model")
+
+
+def row_parallel(w):
+    """Row-parallel weight (in·tp, d): keep TP, gather FSDP dims."""
+    return gather_weight(w, "model", None)
+
+
+def finish_tp(h):
+    """Constrain a row-parallel matmul OUTPUT (B, S, d) to its final
+    (batch-sharded, model-replicated) placement.
+
+    NOTE — §Perf iteration 5 tested the hypothesis that this moves the TP
+    partial-sum all-reduce ahead of the f32 upcast (halving reduced bytes);
+    measured collective bytes were IDENTICAL with and without it (GSPMD
+    already reduces at the earliest point). Kept as a placement guard; the
+    real next lever for the TP-reduce volume is Megatron-style sequence
+    parallelism (reduce-scatter + all-gather at the norm boundaries)."""
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None:
+        return h
+    dp = dp_axes_of(mesh)
+    return jax.lax.with_sharding_constraint(
+        h, NamedSharding(mesh, P(dp, None, None))
+    )
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

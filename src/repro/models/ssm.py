@@ -1,0 +1,186 @@
+"""Mamba2 — SSD (state-space duality) block, chunked, JAX-native.
+
+The SSD inner loop is a textbook case for the paper's ``accumulate``
+machinery: the inter-chunk recurrence
+
+    state_c = decay_c * state_{c-1} + chunk_contribution_c
+
+is exactly the scan-with-carry pattern of kernels/scan_kernel.py (the
+decoupled-lookback adaptation), lifted from scalars to (H, P, N) state
+tensors. We run it as a ``jax.lax.scan`` over chunks — the XLA analogue of
+the sequential-grid carry — while everything inside a chunk is dense matmul
+work shaped for the MXU (DESIGN.md §6, arch-applicability for mamba2/zamba2).
+
+Shapes follow the Mamba2 paper: x (B,S,H,P), A (H,), B/C (B,S,G,N) with G
+groups (we use G=1), dt (B,S,H). chunk length = cfg.ssm_chunk.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import sharding as SH
+
+
+def ssm_init(rng, cfg):
+    d, di = cfg.d_model, cfg.d_inner
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    conv_dim = di + 2 * N  # x-part + B + C go through the conv (G=1)
+    ks = jax.random.split(rng, 6)
+    # in_proj packs [z (di), xBC (conv_dim), dt (H)]
+    return {
+        "in_proj": L.dense_init(ks[0], d, di + conv_dim + H, cfg.dtype),
+        "conv_w": (
+            jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+            * (1.0 / math.sqrt(cfg.ssm_conv))
+        ).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], (H,), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jax.random.uniform(ks[3], (H,), jnp.float32, 1e-3, 0.1)
+            )
+            - 1.0
+        ),
+        "norm": L.rmsnorm_init(di),
+        "out_proj": L.dense_init(ks[4], di, d, cfg.dtype),
+    }
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k],
+    lower-triangular (-inf above the diagonal). x: (..., T)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(T)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk, unroll=False):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) dt: (B,S,H) A: (H,) Bm/Cm: (B,S,N)  (G=1 broadcast over H)
+    Returns y (B,S,H,P), final state (B,H,P,N).
+
+    One ``lax.scan`` over chunks carries the state AND does the intra-chunk
+    work per step, so live memory is one chunk's quadratic intermediates —
+    the same "sequential grid with a carry" shape as kernels/scan_kernel.py.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(f32).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(f32).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(f32).transpose(1, 0, 2, 3)
+
+    def step(h_prev, inp):
+        xk, dtk, Bk, Ck = inp          # (B,l,H,P) (B,l,H) (B,l,N) (B,l,N)
+        dA = dtk * A[None, None, :]    # (B,l,H), negative
+        dA_cum = jnp.cumsum(dA, axis=1)
+        # intra-chunk (quadratic, MXU-friendly)
+        Ltri = jnp.exp(_segsum(dA.transpose(0, 2, 1)))   # (B,H,l,l)
+        scores = jnp.einsum("bln,bsn->bls", Ck, Bk)      # (B,l,l)
+        gated = scores[:, None] * Ltri                   # (B,H,l,l)
+        xdt = xk * dtk[..., None]                        # (B,l,H,P)
+        y_diag = jnp.einsum("bhls,bshp->blhp", gated, xdt)
+        # carry-in contribution read through C with decay-in
+        decay_in = jnp.exp(dA_cum)                       # (B,l,H)
+        y_off = jnp.einsum("bln,blh,bhpn->blhp", Ck, decay_in, h_prev)
+        # state update: decay-to-end weighted outer products + carried state
+        decay_end = jnp.exp(dA_cum[:, -1:, :] - dA_cum)  # (B,l,H)
+        st = jnp.einsum("bln,blh,blhp->bhpn", Bk, dtk * decay_end, xk)
+        h_new = jnp.exp(dA_cum[:, -1, :])[..., None, None] * h_prev + st
+        return h_new, y_diag + y_off
+
+    init = jnp.zeros((Bsz, H, P, N), f32)
+    if unroll:  # cost-model mode (see ModelConfig.unroll_layers)
+        h, ys = init, []
+        for c in range(nc):
+            h, yc = step(h, (xc[c], dtc[c], Bc[c], Cc[c]))
+            ys.append(yc)
+        final, ys = h, jnp.stack(ys)
+    else:
+        final, ys = jax.lax.scan(step, init, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def ssm_apply(p, cfg, x, *, state=None, conv_state=None):
+    """Mamba2 block. x: (B,S,d).
+
+    Train/prefill: state/conv_state None -> full chunked scan.
+    Decode: S==1 with carried (state (B,H,P,N), conv_state (B,K-1,conv_dim)).
+    Returns (y, new_state, new_conv_state).
+    """
+    Bsz, S, d = x.shape
+    di, H, P, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    K = cfg.ssm_conv
+    conv_dim = di + 2 * N
+
+    zxbcdt = x @ SH.col_parallel(p["in_proj"])
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    # depthwise causal conv over sequence (zero history == fresh prefill)
+    if conv_state is None:
+        conv_state = jnp.zeros((Bsz, K - 1, conv_dim), xBC.dtype)
+    padded = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    new_conv_state = padded[:, -(K - 1):, :]
+    windows = jnp.stack(
+        [padded[:, i : i + S, :] for i in range(K)], axis=2
+    )  # (B,S,K,conv_dim)
+    xBC = jax.nn.silu(
+        jnp.einsum("bskc,kc->bsc", windows.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    ).astype(x.dtype)
+
+    xin, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    xin = xin.reshape(Bsz, S, H, P)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+
+    # S > 1 with a provided state only happens at prefill (position 0),
+    # where the state is zeros — the chunked path's implicit init.
+    if state is None or S > 1:
+        pad = (-S) % cfg.ssm_chunk
+        if pad:
+            xin_p = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xin_p, dt_p, Bm_p, Cm_p = xin, dt, Bm, Cm
+        y, new_state = ssd_chunked(
+            xin_p, dt_p, A, Bm_p, Cm_p, cfg.ssm_chunk,
+            unroll=cfg.unroll_layers,
+        )
+        y = y[:, :S]
+    else:
+        # single-token recurrence: h' = exp(dt A) h + dt B x ; y = C h' + D x
+        dt1 = dt[:, 0]  # (B,H)
+        dec = jnp.exp(dt1 * A[None, :])  # (B,H)
+        outer = jnp.einsum(
+            "bhp,bn->bhpn", xin[:, 0].astype(jnp.float32) * dt1[..., None],
+            Bm[:, 0].astype(jnp.float32),
+        )
+        new_state = dec[..., None, None] * state + outer
+        y = jnp.einsum(
+            "bhpn,bn->bhp", new_state, Cm[:, 0].astype(jnp.float32)
+        )[:, None]  # (B,1,H,P)
+
+    y = y + xin.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)  # gated
+    y = L.rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ SH.row_parallel(p["out_proj"]), new_state, new_conv_state

@@ -1,0 +1,11 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+)
+from repro.optim.compression import (  # noqa: F401
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+)

@@ -1,0 +1,85 @@
+"""AdamW with decoupled weight decay + global-norm clipping.
+
+Built from scratch (no optax in this container). States are pytrees that
+inherit the parameter PartitionSpecs, so the optimizer shards ZeRO-style for
+free under pjit (m/v live f32 regardless of the bf16 params).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=zeros,
+        v=jax.tree.map(jnp.copy, zeros),
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)
+        )
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), gnorm
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr=3e-4,
+    b1=0.9,
+    b2=0.95,
+    eps=1e-8,
+    weight_decay=0.1,
+    max_grad_norm=1.0,
+):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (update + weight_decay * pf)
+        return pf.astype(p.dtype), m_new, v_new
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    outs = [
+        upd(p, g, m, v)
+        for p, g, m, v in zip(
+            leaves_p,
+            jax.tree.leaves(grads),
+            jax.tree.leaves(state.m),
+            jax.tree.leaves(state.v),
+        )
+    ]
+    new_params = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm

@@ -1,0 +1,6 @@
+from repro.runtime.supervisor import (  # noqa: F401
+    ElasticPlan,
+    StragglerMonitor,
+    Supervisor,
+    shrink_data_axis,
+)

@@ -1,0 +1,154 @@
+"""Fault-tolerance runtime: retries, stragglers, elastic re-meshing.
+
+What actually fails at 1000+ nodes and what this module does about it:
+
+  * **Transient step failure** (preempted host, flaky ICI link, XLA OOM
+    race): ``Supervisor.run_step`` retries the jitted step up to
+    ``max_retries`` with the same inputs — steps are pure functions of
+    (state, batch), so retry is exact.
+  * **Permanent node loss**: the step keeps failing → Supervisor raises
+    ``NodeLossError`` carrying an ``ElasticPlan``: shrink the ``data`` axis
+    to the largest size the survivors support, restore the last committed
+    checkpoint under the new mesh (ckpt.restore with new shardings — leaves
+    are mesh-agnostic), and continue. The driver (launch/train.py) owns the
+    loop; the policy lives here and is unit-tested with injected failures.
+  * **Stragglers**: per-host step-time EMA; a host slower than
+    ``threshold × median`` is flagged. Mitigations wired in the driver:
+    re-balance the data pipeline away from the slow host (its shard size is
+    a function of the plan) — the TPU-idiomatic response, since backup
+    tasks à la MapReduce don't apply to lock-step SPMD collectives; a
+    persistent straggler is treated as a lost node (shrink plan).
+  * **Heartbeats**: step completion timestamps per host; a host silent for
+    ``timeout`` is presumed dead (drives the same elastic path).
+
+The clock is injectable so all of this is testable on one CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+class NodeLossError(RuntimeError):
+    def __init__(self, plan):
+        super().__init__(f"unrecoverable step failure; elastic plan: {plan}")
+        self.plan = plan
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Target topology after losing nodes."""
+
+    old_data: int
+    new_data: int
+    model: int
+
+    @property
+    def lost_fraction(self):
+        return 1.0 - self.new_data / self.old_data
+
+
+def shrink_data_axis(data_size: int, n_failed_hosts: int,
+                     hosts_per_slice: int = 1) -> int:
+    """Largest power-of-two data-axis size supportable after failures.
+
+    TP (`model`) slices are the atomic unit — a dead host kills its whole
+    model slice, so capacity drops by whole data-rows. Power-of-two keeps
+    batch divisibility and collective algorithms happy.
+    """
+    survivors = data_size - n_failed_hosts * hosts_per_slice
+    if survivors <= 0:
+        raise ValueError("no survivors")
+    size = 1
+    while size * 2 <= survivors:
+        size *= 2
+    return size
+
+
+class StragglerMonitor:
+    """EMA step times per host; flags hosts slower than k x median."""
+
+    def __init__(self, n_hosts: int, *, alpha=0.2, threshold=1.5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ema = [None] * n_hosts
+
+    def record(self, host: int, step_time: float):
+        prev = self.ema[host]
+        self.ema[host] = (
+            step_time if prev is None
+            else (1 - self.alpha) * prev + self.alpha * step_time
+        )
+
+    def stragglers(self):
+        vals = [e for e in self.ema if e is not None]
+        if len(vals) < 2:
+            return []
+        med = sorted(vals)[len(vals) // 2]
+        return [
+            i
+            for i, e in enumerate(self.ema)
+            if e is not None and e > self.threshold * med
+        ]
+
+    def rebalance_weights(self):
+        """Relative data-shard weights ∝ 1/ema — feed to the pipeline."""
+        vals = [e if e is not None else 1.0 for e in self.ema]
+        inv = [1.0 / v for v in vals]
+        s = sum(inv)
+        return [w / s for w in inv]
+
+
+class Supervisor:
+    """Wraps the jitted train step with retry + heartbeat + elastic policy."""
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        *,
+        max_retries: int = 2,
+        heartbeat_timeout: float = 300.0,
+        data_axis: int = 16,
+        model_axis: int = 16,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.step_fn = step_fn
+        self.max_retries = max_retries
+        self.heartbeat_timeout = heartbeat_timeout
+        self.data_axis = data_axis
+        self.model_axis = model_axis
+        self.clock = clock
+        self.last_heartbeat: dict[int, float] = {}
+        self.retries_total = 0
+
+    def beat(self, host: int):
+        self.last_heartbeat[host] = self.clock()
+
+    def dead_hosts(self):
+        now = self.clock()
+        return [
+            h
+            for h, t in self.last_heartbeat.items()
+            if now - t > self.heartbeat_timeout
+        ]
+
+    def elastic_plan(self, n_failed: int) -> ElasticPlan:
+        return ElasticPlan(
+            old_data=self.data_axis,
+            new_data=shrink_data_axis(self.data_axis, n_failed),
+            model=self.model_axis,
+        )
+
+    def run_step(self, *args, **kwargs):
+        err = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                out = self.step_fn(*args, **kwargs)
+                self.beat(0)
+                return out
+            except Exception as e:  # noqa: BLE001 — anything transient
+                err = e
+                self.retries_total += 1
+        dead = max(len(self.dead_hosts()), 1)
+        raise NodeLossError(self.elastic_plan(dead)) from err

@@ -1,0 +1,126 @@
+"""Hypothesis property tests on the AK primitive suite's invariants.
+
+These pin the *system* invariants the paper's library guarantees:
+sort output is an ordered permutation of its input; sortperm applied to the
+input reproduces the sort; scans are associative-fold prefixes; searchsorted
+returns valid insertion points; any/all agree with Python semantics.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import core as ak
+from repro.core import dispatch
+
+# subnormals excluded: XLA flushes them to zero (FTZ) on this platform,
+# which is a representation detail, not a sorting-order bug
+finite_f32 = st.floats(
+    min_value=-1e6, max_value=1e6, allow_nan=False, allow_infinity=False,
+    allow_subnormal=False, width=32,
+)
+small_arrays = st.lists(finite_f32, min_size=1, max_size=300)
+int_arrays = st.lists(
+    st.integers(min_value=-1000, max_value=1000), min_size=1, max_size=300
+)
+BACKENDS = ["jnp", "pallas"]
+
+
+@given(xs=small_arrays, backend=st.sampled_from(BACKENDS))
+@settings(max_examples=30, deadline=None)
+def test_sort_is_ordered_permutation(xs, backend):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    s = np.asarray(ak.merge_sort(x, backend=backend))
+    assert (s[1:] >= s[:-1]).all()
+    np.testing.assert_array_equal(np.sort(np.asarray(x)), s)
+
+
+@given(xs=int_arrays, backend=st.sampled_from(BACKENDS))
+@settings(max_examples=30, deadline=None)
+def test_sortperm_applied_sorts(xs, backend):
+    x = jnp.asarray(np.asarray(xs, np.int32))
+    perm = np.asarray(ak.sortperm(x, backend=backend))
+    assert sorted(perm.tolist()) == list(range(len(xs)))  # a permutation
+    applied = np.asarray(x)[perm]
+    assert (applied[1:] >= applied[:-1]).all()
+
+
+@given(xs=int_arrays)
+@settings(max_examples=20, deadline=None)
+def test_sortperm_lowmem_agrees(xs):
+    x = jnp.asarray(np.asarray(xs, np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(ak.sortperm_lowmem(x)), np.asarray(ak.sortperm(x))
+    )
+
+
+@given(xs=small_arrays, backend=st.sampled_from(BACKENDS))
+@settings(max_examples=30, deadline=None)
+def test_scan_prefix_property(xs, backend):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    s = np.asarray(ak.accumulate(jnp.add, x, init=0.0, backend=backend))
+    np.testing.assert_allclose(
+        s, np.cumsum(np.asarray(x), dtype=np.float32), rtol=1e-3, atol=1e-3
+    )
+    e = np.asarray(
+        ak.accumulate(jnp.add, x, init=0.0, inclusive=False,
+                      backend=backend)
+    )
+    assert e[0] == 0.0
+    np.testing.assert_allclose(e[1:], s[:-1], rtol=1e-6)
+
+
+@given(xs=small_arrays, q=finite_f32, backend=st.sampled_from(BACKENDS))
+@settings(max_examples=30, deadline=None)
+def test_searchsorted_insertion_invariant(xs, q, backend):
+    hay = jnp.sort(jnp.asarray(np.asarray(xs, np.float32)))
+    i = int(ak.searchsortedfirst(hay, jnp.float32(q)[None],
+                                 backend=backend)[0])
+    j = int(ak.searchsortedlast(hay, jnp.float32(q)[None],
+                                backend=backend)[0])
+    h = np.asarray(hay)
+    assert 0 <= i <= j <= len(h)
+    assert (h[:i] < q).all() and (h[i:] >= q).all()
+    assert (h[:j] <= q).all() and (h[j:] > q).all()
+
+
+@given(xs=int_arrays, backend=st.sampled_from(BACKENDS))
+@settings(max_examples=30, deadline=None)
+def test_any_all_agree_with_python(xs, backend):
+    x = jnp.asarray(np.asarray(xs, np.int32))
+    got_any = bool(ak.any_pred(lambda a: a > 0, x, backend=backend))
+    got_all = bool(ak.all_pred(lambda a: a > 0, x, backend=backend))
+    assert got_any == any(v > 0 for v in xs)
+    assert got_all == all(v > 0 for v in xs)
+
+
+@given(xs=small_arrays)
+@settings(max_examples=20, deadline=None)
+def test_reduce_backends_agree(xs):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    a = float(ak.reduce(jnp.add, x, init=0.0, backend="jnp"))
+    b = float(ak.reduce(jnp.add, x, init=0.0, backend="pallas"))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_switch_below_falls_back():
+    # below the threshold the jnp path must be taken (observable: identical
+    # result, and no pallas tracing of tiny shapes)
+    x = jnp.arange(10.0)
+    got = ak.reduce(jnp.add, x, init=0.0, switch_below=1000,
+                    backend="pallas")
+    assert float(got) == float(x.sum())
+
+
+def test_dispatch_modes():
+    assert dispatch.resolve("jnp") == "jnp"
+    assert dispatch.resolve("pallas") == "pallas"
+    with dispatch.backend("pallas"):
+        assert dispatch.resolve(None) == "pallas"
+    assert dispatch.resolve(None) in ("jnp", "pallas")  # auto resolves
+
+
+def test_foreachindex_closure_capture():
+    # the AK do-block idiom: closures capture surrounding arrays
+    src = jnp.arange(100.0)
+    out = ak.foreachindex(lambda i: src[i] * 2.0, 100, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(src) * 2)

@@ -1,0 +1,159 @@
+"""Per-kernel shape × dtype sweeps: Pallas (interpret) vs pure-jnp oracle.
+
+Every kernel in repro.kernels gets swept over irregular sizes (tail blocks,
+single blocks, multi-block) and dtypes, asserting allclose against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SIZES = [1, 5, 100, 1024, 8192, 8193, 20000, 65536, 100_001]
+DTYPES = [jnp.float32, jnp.int32]
+
+
+def _data(rng, n, dtype):
+    if dtype == jnp.int32:
+        return jnp.asarray(
+            rng.integers(-10_000, 10_000, size=n).astype(np.int32)
+        )
+    return jnp.asarray(rng.normal(size=n).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_map_matches_ref(rng, n, dtype):
+    x = _data(rng, n, dtype)
+    if dtype == jnp.int32:
+        f = lambda a: a * 3 + 1
+    else:
+        f = lambda a: jnp.exp(-jnp.abs(a)) + a * a
+    got = ops.map_elementwise(f, x)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.map_ref(f, x)), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_map_multi_operand(rng, n):
+    x = _data(rng, n, jnp.float32)
+    y = _data(rng, n, jnp.float32)
+    f = lambda a, b: a * b + jnp.sin(a)
+    got = ops.map_elementwise(f, x, y)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(f(x, y)), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize(
+    "op,unit",
+    [(jnp.add, 0.0), (jnp.maximum, -np.inf), (jnp.minimum, np.inf)],
+)
+def test_reduce_matches_ref(rng, n, op, unit):
+    x = _data(rng, n, jnp.float32)
+    got = ops.mapreduce(lambda a: a, op, x, unit=unit)
+    want = ref.reduce_ref(lambda a: a, op, x, unit=unit)
+    np.testing.assert_allclose(
+        float(got), float(want), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_mapreduce_sum_squares(rng, n):
+    x = _data(rng, n, jnp.float32)
+    got = ops.mapreduce(lambda a: a * a, jnp.add, x, unit=0.0)
+    np.testing.assert_allclose(
+        float(got), float(jnp.sum(x * x)), rtol=1e-4
+    )
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("exclusive", [False, True])
+def test_scan_matches_ref(rng, n, exclusive):
+    x = _data(rng, n, jnp.float32)
+    got = ops.accumulate(jnp.add, x, unit=0.0, exclusive=exclusive)
+    want = ref.scan_ref(jnp.add, x, unit=0.0, exclusive=exclusive)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_scan_max(rng, n):
+    x = _data(rng, n, jnp.float32)
+    got = ops.accumulate(jnp.maximum, x, unit=-np.inf)
+    want = jax.lax.associative_scan(jnp.maximum, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sort_matches_ref(rng, n, dtype):
+    x = _data(rng, n, dtype)
+    got = ops.sort(x)
+    np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
+
+
+@pytest.mark.parametrize("n", [100, 8192, 30000])
+def test_sort_descending(rng, n):
+    x = _data(rng, n, jnp.float32)
+    got = ops.sort(x, descending=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.sort(np.asarray(x))[::-1]
+    )
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_argsort_stable(rng, n, dtype):
+    lo, hi = (0, 17) if dtype == jnp.int32 else (0, 3)
+    x = jnp.asarray(rng.integers(lo, hi, size=n)).astype(dtype)
+    got = ops.argsort(x)
+    want = np.argsort(np.asarray(x), kind="stable")
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_sort_kv_permutation(rng, n):
+    k = _data(rng, n, jnp.float32)
+    v = jnp.arange(n, dtype=jnp.int32)
+    sk, sv = ops.sort_kv(k, v)
+    np.testing.assert_array_equal(np.asarray(sk), np.sort(np.asarray(k)))
+    # payload is the permutation that sorts the keys
+    np.testing.assert_array_equal(
+        np.asarray(k)[np.asarray(sv)], np.asarray(sk)
+    )
+
+
+@pytest.mark.parametrize("nh", [10, 1000, 8192, 50_000])
+@pytest.mark.parametrize("nq", [1, 100, 777])
+@pytest.mark.parametrize("side", ["left", "right"])
+def test_searchsorted_matches_ref(rng, nh, nq, side):
+    hay = jnp.sort(_data(rng, nh, jnp.float32))
+    q = jnp.concatenate([
+        _data(rng, nq, jnp.float32),
+        hay[:: max(nh // 8, 1)],  # exact hits exercise the </<= edge
+    ])
+    got = ops.searchsorted(hay, q, side=side)
+    want = np.searchsorted(np.asarray(hay), np.asarray(q), side=side)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("n", [100, 8192, 100_001])
+@pytest.mark.parametrize("nbins", [4, 64, 1024])
+def test_histogram_matches_ref(rng, n, nbins):
+    x = _data(rng, n, jnp.float32)
+    h, mn, mx = ops.minmax_histogram(x, nbins, -3.0, 3.0)
+    hr, mnr, mxr = ref.minmax_histogram_ref(x, nbins, -3.0, 3.0)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+    assert float(mn) == float(mnr)
+    assert float(mx) == float(mxr)
+    assert int(h.sum()) == n

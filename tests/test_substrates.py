@@ -1,0 +1,239 @@
+"""Optimizer, checkpoint, runtime and data-pipeline unit tests."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ckpt as CK
+from repro.data import SyntheticCorpus
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.runtime.supervisor import (
+    NodeLossError,
+    StragglerMonitor,
+    Supervisor,
+    shrink_data_axis,
+)
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    target = jnp.array([1.0, 2.0])
+
+    for _ in range(300):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, opt, _ = adamw_update(params, g, opt, lr=5e-2,
+                                      weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    total = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_int8_quantization_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=4096).astype(np.float32))
+    q, scale, resid = quantize_int8(x)
+    back = dequantize_int8(q, scale)
+    # error bounded by scale/2 per element, exactly captured by residual
+    np.testing.assert_allclose(np.asarray(back + resid), np.asarray(x),
+                               rtol=1e-6, atol=1e-6)
+    assert float(jnp.max(jnp.abs(x - back))) <= float(scale) * 0.51
+
+
+def test_error_feedback_reduces_bias():
+    """With EF, the long-run mean of dequantized grads tracks the true
+    gradient far better than single-shot quantization."""
+    rng = np.random.default_rng(1)
+    g_true = jnp.asarray(rng.normal(size=512).astype(np.float32)) * 1e-3
+    resid = jnp.zeros_like(g_true)
+    acc = jnp.zeros_like(g_true)
+    steps = 50
+    for _ in range(steps):
+        q, s, resid = quantize_int8(g_true, residual=resid)
+        acc = acc + dequantize_int8(q, s)
+    ef_err = float(jnp.linalg.norm(acc / steps - g_true))
+    q1, s1, _ = quantize_int8(g_true)
+    one_err = float(jnp.linalg.norm(dequantize_int8(q1, s1) - g_true))
+    assert ef_err <= one_err * 0.5
+
+
+@pytest.mark.slow
+def test_compressed_psum_matches_mean(multidevice):
+    multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.optim import compressed_psum
+
+mesh = jax.make_mesh((4,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+g = jnp.asarray(rng.normal(size=(4, 1024)).astype(np.float32))
+
+def f(gl):
+    out, resid = compressed_psum(gl[0], "data")
+    return out[None], resid[None]
+
+out, resid = jax.shard_map(f, mesh=mesh, in_specs=(P("data", None),),
+                           out_specs=(P("data", None), P("data", None)))(g)
+want = np.asarray(g).mean(axis=0)
+got = np.asarray(out)[0]
+# single-shot error = one int8 step of the global-max scale
+np.testing.assert_allclose(got, want, atol=float(np.abs(g).max()) / 60)
+# EF guarantee: averaged over rounds, the compressed mean converges on the
+# true mean far tighter than any single shot
+rounds, acc = 20, np.zeros_like(want)
+resid = jnp.zeros_like(g)
+def f2(gl, rl):
+    out, r = compressed_psum(gl[0], "data", residual=rl[0])
+    return out[None], r[None]
+f2s = jax.shard_map(f2, mesh=mesh,
+                    in_specs=(P("data", None), P("data", None)),
+                    out_specs=(P("data", None), P("data", None)))
+for _ in range(rounds):
+    out, resid = f2s(g, resid)
+    acc += np.asarray(out)[0]
+np.testing.assert_allclose(acc / rounds, want,
+                           atol=float(np.abs(g).max()) / 120)
+print("OK")
+""", ndev=4)
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(10, dtype=jnp.float32),
+        "b": {"c": jnp.ones((3, 4), jnp.bfloat16)},
+    }
+    CK.save(str(tmp_path), tree, 7)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+    restored, step = CK.restore(str(tmp_path), like)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A stale .tmp dir must never be visible as a committed step."""
+    tree = {"a": jnp.zeros(3)}
+    CK.save(str(tmp_path), tree, 1)
+    os.makedirs(tmp_path / "step_00000002.tmp")  # simulated crash mid-write
+    assert CK.latest_step(str(tmp_path)) == 1
+    restored, step = CK.restore(str(tmp_path), tree)
+    assert step == 1
+
+
+def test_checkpoint_keeps_latest(tmp_path):
+    w = CK.AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        w.save(tree, s)
+        w.wait()
+    assert CK.latest_step(str(tmp_path)) == 4
+    assert sorted(os.listdir(tmp_path))[-2:] == ["step_00000003",
+                                                 "step_00000004"]
+
+
+def test_async_checkpointer_survives_mutation(tmp_path):
+    """The snapshot is taken synchronously — mutating (donating) the live
+    buffers after save() must not corrupt the write."""
+    w = CK.AsyncCheckpointer(str(tmp_path))
+    x = jnp.arange(1000, dtype=jnp.float32)
+    w.save({"x": x}, 1)
+    x = x * 0  # simulate donation/reuse
+    w.wait()
+    restored, _ = CK.restore(str(tmp_path), {"x": x})
+    np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                  np.arange(1000, dtype=np.float32))
+
+
+# ------------------------------------------------------------------ runtime
+def test_supervisor_retries_then_succeeds():
+    calls = {"n": 0}
+
+    def flaky(x):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return x + 1
+
+    sup = Supervisor(flaky, max_retries=2)
+    assert sup.run_step(1) == 2
+    assert sup.retries_total == 2
+
+
+def test_supervisor_raises_elastic_plan():
+    def dead(x):
+        raise RuntimeError("node gone")
+
+    sup = Supervisor(dead, max_retries=1, data_axis=16, model_axis=16)
+    with pytest.raises(NodeLossError) as e:
+        sup.run_step(0)
+    plan = e.value.plan
+    assert plan.new_data < plan.old_data
+    assert plan.model == 16
+
+
+def test_shrink_data_axis():
+    assert shrink_data_axis(16, 1) == 8
+    assert shrink_data_axis(16, 7) == 8
+    assert shrink_data_axis(16, 9) == 4
+    with pytest.raises(ValueError):
+        shrink_data_axis(4, 4)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(n_hosts=4, threshold=1.5)
+    t = {0: 1.0, 1: 1.0, 2: 1.05, 3: 3.0}
+    for _ in range(10):
+        for h, v in t.items():
+            mon.record(h, v)
+    assert mon.stragglers() == [3]
+    w = mon.rebalance_weights()
+    assert w[3] < w[0]  # slow host gets less data
+    np.testing.assert_allclose(sum(w), 1.0)
+
+
+def test_heartbeat_timeout():
+    clock = {"t": 0.0}
+    sup = Supervisor(lambda x: x, heartbeat_timeout=10.0,
+                     clock=lambda: clock["t"])
+    sup.beat(0)
+    sup.beat(1)
+    clock["t"] = 5.0
+    sup.beat(0)
+    clock["t"] = 12.0
+    assert sup.dead_hosts() == [1]
+
+
+# --------------------------------------------------------------------- data
+def test_corpus_deterministic_and_restart_safe():
+    c = SyntheticCorpus(vocab=1000, seq_len=32, seed=5)
+    a1, b1 = c.batch(step=3, batch_size=4)
+    a2, b2 = c.batch(step=3, batch_size=4)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(b1, b2)
+    a3, _ = c.batch(step=4, batch_size=4)
+    assert not np.array_equal(a1, a3)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a1[:, 1:], b1[:, :-1])
+    assert a1.max() < 1000 and a1.min() >= 0
