@@ -1,0 +1,96 @@
+"""Dispatch-overhead microbenchmark: registry jit cache vs per-call re-jit.
+
+The seed code rebuilt ``jax.jit(functools.partial(kernel, f, ...))`` on
+every wrapper call, so hot loops (the serve-loop sampler, MoE routing)
+retraced continuously — a fresh jit object never hits jax's own cache. The
+primitive registry replaces that with one cached jitted kernel per
+(primitive, backend, statics, tuning) key.
+
+Rows (CSV, matching benchmarks/run.py):
+
+    dispatch.<prim>.rejit     — old behaviour: fresh jit per call
+    dispatch.<prim>.registry  — registry path; derived column reports the
+                                trace counters proving one trace total
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as ak
+from repro.core import registry
+from repro.kernels import ref as kref
+
+
+def _time_loop(fn, iters):
+    fn()  # warm once so compile time isn't in the loop for either side
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(n: int = 65_536, iters: int = 30):
+    x = jnp.arange(n, dtype=jnp.float32)
+    rows = []
+
+    cases = {
+        # name -> (rejit thunk, registry thunk, registry primitive)
+        "map": (
+            lambda: jax.jit(functools.partial(kref.map_ref, jnp.sin))(x),
+            lambda: ak.map_elements(jnp.sin, x, backend="jnp"),
+            "map",
+        ),
+        "mapreduce": (
+            lambda: jax.jit(
+                functools.partial(kref.reduce_ref, jnp.sin, jnp.add, unit=0.0)
+            )(x),
+            lambda: ak.mapreduce(jnp.sin, jnp.add, x, init=0.0,
+                                 backend="jnp"),
+            "mapreduce",
+        ),
+        "accumulate": (
+            lambda: jax.jit(
+                functools.partial(kref.scan_ref, jnp.add, unit=0.0)
+            )(x),
+            lambda: ak.accumulate(jnp.add, x, init=0.0, backend="jnp"),
+            "accumulate",
+        ),
+    }
+
+    for name, (rejit, through_registry, prim) in cases.items():
+        us_rejit = _time_loop(rejit, iters)
+        rows.append((
+            f"dispatch.{name}.rejit", us_rejit,
+            f"n={n} traces={iters + 1}",  # fresh jit object every call
+        ))
+
+        registry.get(prim).clear()
+        registry.get(prim).reset_stats()
+        us_reg = _time_loop(through_registry, iters)
+        s = registry.stats(prim)
+        rows.append((
+            f"dispatch.{name}.registry", us_reg,
+            f"n={n} traces={s['traces']} cache_hits={s['cache_hits']}"
+            f" speedup={us_rejit / max(us_reg, 1e-9):.1f}x",
+        ))
+        if s["traces"] != 1:
+            # survives `python -O` and lets the remaining benchmark rows
+            # stream instead of aborting the whole CSV run
+            rows.append((
+                f"dispatch.{name}.RETRACE_BUG", 0.0,
+                f"expected 1 trace, saw {s['traces']} — registry cache broken",
+            ))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV rows:
 
     table2.*        — §III arithmetic kernels (RBF + LJG)          [Table II]
+    dispatch.*      — registry jit-cache vs per-call re-jit overhead
     fig_scaling.*   — distributed-sort weak/strong scaling         [Figs 1-3]
     fig4.*          — max sorting throughput                       [Fig 4]
     fig5.*          — cost-normalised accelerator crossover        [Fig 5]
@@ -46,9 +47,11 @@ def roofline_rows(path="results/roofline"):
 
 
 def main() -> None:
-    from benchmarks import arithmetic, cost, scaling, throughput
+    from benchmarks import arithmetic, cost, dispatch_overhead, scaling
+    from benchmarks import throughput
 
     _emit(arithmetic.run(n=1_000_000))
+    _emit(dispatch_overhead.run())
     _emit(scaling.run("weak", n_per_rank=32_768, devcounts=(1, 2, 4, 8)))
     _emit(scaling.run("strong", total=262_144, devcounts=(1, 2, 4, 8)))
     _emit(throughput.run(devcounts=(4,), sizes=(16_384, 65_536)))

@@ -7,7 +7,9 @@ Import as a namespace, AK-style::
     ak.merge_sort(x, backend="pallas")    # hand-tiled TPU path
     ak.sihsort(shard, axis_name="data")   # distributed (inside shard_map)
 """
+from repro.core import registry
 from repro.core.dispatch import backend, default_backend, set_default_backend
+from repro.core.registry import tuning
 from repro.core.ops import (
     accumulate,
     all_pred,
@@ -35,6 +37,7 @@ from repro.core.distributed import (
 
 __all__ = [
     "backend", "default_backend", "set_default_backend",
+    "registry", "tuning",
     "accumulate", "all_pred", "any_pred", "foreachindex", "map_elements",
     "mapreduce", "reduce",
     "merge_sort", "merge_sort_by_key", "sortperm", "sortperm_lowmem", "topk",

@@ -2,28 +2,26 @@
 
 Not in the paper's public §II-B list but load-bearing inside MPISort
 ("Sampling with Interpolated Histograms"); exposed here because MoE routing
-reuses it verbatim (tokens-per-expert counts).
+reuses it verbatim (tokens-per-expert counts). Registered in
+``repro.core.registry`` like every other primitive.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
+from repro.core import registry
 
-from repro.core import dispatch
-from repro.kernels import ops as kops
-from repro.kernels import ref as kref
+_minmax_histogram = registry.get("minmax_histogram")
+_bincount = registry.get("bincount")
 
 
 def minmax_histogram(x, nbins: int, lo, hi, *, backend: str | None = None):
     """(histogram over [lo, hi) with edge clipping, min(x), max(x)) in one
     pass. ``x`` may be any shape; flattened."""
-    if dispatch.resolve(backend) == "pallas":
-        return kops.minmax_histogram(x, nbins, lo, hi)
-    return kref.minmax_histogram_ref(x, nbins, lo, hi)
+    return _minmax_histogram(x, lo, hi, nbins=nbins, backend=backend)
 
 
 def bincount(ids, nbins: int, *, backend: str | None = None):
     """Counts of integer ids in [0, nbins) — the MoE tokens-per-expert
-    histogram. Scatter-free (one-hot contraction) on both paths."""
-    del backend
-    onehot = ids.reshape(-1, 1) == jnp.arange(nbins, dtype=ids.dtype)[None, :]
-    return jnp.sum(onehot, axis=0, dtype=jnp.int32)
+    histogram. Scatter is a linear-memory ``segment_sum`` (XLA lowers it to
+    a deterministic sorted scatter-add on TPU) on both paths — no O(n·nbins)
+    one-hot temp."""
+    return _bincount(ids, nbins=nbins, backend=backend)

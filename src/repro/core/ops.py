@@ -2,14 +2,19 @@
 
 Function-for-function port of the paper's §II-B list. Every primitive takes
 an optional ``backend=`` override resolved by ``repro.core.dispatch`` and
-has two implementations: the portable jnp one and the Pallas TPU one.
+has two implementations: the portable jnp one and the Pallas TPU one —
+registered once in ``repro.core.registry``, which owns backend selection,
+the jit-trace caches, and the per-primitive tuning defaults. These wrappers
+only adapt the public AK-style signatures onto the registry records.
 
 Fidelity notes (see DESIGN.md §2 for the full mapping):
   * ``foreachindex(f, n)`` passes f an index *vector* instead of a scalar
     thread index — one vreg lane per "thread".
   * ``reduce``/``mapreduce`` keep the paper's ``switch_below``: below the
     threshold the reduction skips the tiled kernel entirely (the analogue of
-    finishing on the host once launch overhead stops being masked).
+    finishing on the host once launch overhead stops being masked). The
+    default now comes from the registry's tuning table; an explicit per-call
+    value still wins.
   * ``any``/``all`` use the paper's own conservative mapreduce fallback —
     TPU has no well-defined racy single-winner write (named ``any_pred``/
     ``all_pred``; Python reserves the bare names).
@@ -18,12 +23,18 @@ Fidelity notes (see DESIGN.md §2 for the full mapping):
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import dispatch
-from repro.kernels import ops as kops
-from repro.kernels import ref as kref
+from repro.core import registry
+
+_map = registry.get("map")
+_mapreduce = registry.get("mapreduce")
+_accumulate = registry.get("accumulate")
+
+
+def _identity(a):
+    # module-level (stable identity) so ``reduce`` keeps one cache key
+    return a
 
 
 def foreachindex(f, n: int, *, dtype=jnp.int32, backend: str | None = None):
@@ -38,10 +49,7 @@ def foreachindex(f, n: int, *, dtype=jnp.int32, backend: str | None = None):
 
 def map_elements(f, *arrays, out_dtype=None, backend: str | None = None):
     """Elementwise ``f`` over same-shaped arrays (the do-block body)."""
-    if dispatch.resolve(backend) == "pallas":
-        return kops.map_elementwise(f, *arrays, out_dtype=out_dtype)
-    out = kref.map_ref(f, *arrays)
-    return out.astype(out_dtype) if out_dtype is not None else out
+    return _map(*arrays, f=f, out_dtype=out_dtype, backend=backend)
 
 
 def mapreduce(
@@ -49,20 +57,25 @@ def mapreduce(
     op,
     *arrays,
     init,
-    switch_below: int = 0,
+    switch_below: int | None = None,
     out_dtype=None,
     backend: str | None = None,
 ):
     """``mapreduce(f, op, itr; init)`` — f applied per element, op-folded.
 
     ``switch_below``: below this element count the tiled kernel is skipped
-    (AK's host-finish trade-off, reshaped for a fused-graph world).
+    (AK's host-finish trade-off, reshaped for a fused-graph world). ``None``
+    defers to the tuning table (``registry.tuning``).
     """
-    n = arrays[0].size
-    use_pallas = dispatch.resolve(backend) == "pallas" and n >= switch_below
-    if use_pallas and n > 0:
-        return kops.mapreduce(f, op, *arrays, unit=init, out_dtype=out_dtype)
-    return kref.reduce_ref(f, op, *arrays, unit=init, out_dtype=out_dtype)
+    return _mapreduce(
+        *arrays,
+        f=f,
+        op=op,
+        init=init,
+        out_dtype=out_dtype,
+        switch_below=switch_below,
+        backend=backend,
+    )
 
 
 def reduce(
@@ -70,14 +83,14 @@ def reduce(
     x,
     *,
     init,
-    switch_below: int = 0,
+    switch_below: int | None = None,
     out_dtype=None,
     backend: str | None = None,
 ):
     """``reduce(op, itr; init)`` — no associativity-order guarantee, exactly
     like the paper (parallel fold)."""
     return mapreduce(
-        lambda a: a,
+        _identity,
         op,
         x,
         init=init,
@@ -91,15 +104,18 @@ def accumulate(
     op, x, *, init, inclusive: bool = True, backend: str | None = None
 ):
     """``accumulate`` — prefix scan (inclusive or exclusive), single pass."""
-    if dispatch.resolve(backend) == "pallas":
-        return kops.accumulate(op, x, unit=init, exclusive=not inclusive)
-    return kref.scan_ref(op, x, unit=init, exclusive=not inclusive)
+    return _accumulate(x, op=op, init=init, inclusive=inclusive,
+                       backend=backend)
 
 
 def any_pred(f, x, *, backend: str | None = None):
-    """``any`` — conservative mapreduce form (paper's fallback algorithm)."""
+    """``any`` — conservative mapreduce form (paper's fallback algorithm).
+
+    ``f`` is passed through unwrapped so a stable predicate keeps a stable
+    registry cache key (a fresh closure per call would force a retrace).
+    """
     return mapreduce(
-        lambda a: f(a),
+        f,
         jnp.logical_or,
         x,
         init=False,
@@ -111,7 +127,7 @@ def any_pred(f, x, *, backend: str | None = None):
 def all_pred(f, x, *, backend: str | None = None):
     """``all`` — conservative mapreduce form (paper's fallback algorithm)."""
     return mapreduce(
-        lambda a: f(a),
+        f,
         jnp.logical_and,
         x,
         init=True,

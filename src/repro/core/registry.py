@@ -1,0 +1,547 @@
+"""Primitive registry — centralised backend dispatch with cached jitted
+kernels and a per-primitive tuning table.
+
+This is the JAX rendition of the paper's single-call-site claim: in AK.jl,
+``mapreduce(f, op, itr)`` picks the specialised method via Julia multiple
+dispatch.  Here every AK primitive is registered ONCE as a :class:`Primitive`
+record carrying
+
+  * its portable (``jnp``) implementation,
+  * its Pallas TPU implementation (``None`` when the portable one already is
+    the right shape for every backend, e.g. ``bincount``'s segment-sum),
+  * which call options are static (select a trace) vs traced operands,
+  * tunable defaults drawn from the central, overridable
+    :class:`TuningTable` — AK's ``switch_below`` host-finish trade-off
+    generalised, plus block geometry and Pallas interpret mode.
+
+``Primitive.__call__`` then does the whole dispatch dance in one place:
+
+  1. resolve the backend policy via :mod:`repro.core.dispatch`
+     (auto / jnp / pallas, scoped overrides respected);
+  2. demote pallas→jnp below the primitive's ``switch_below`` element count
+     (the paper's "stop paying launch overhead on tiny tails" knob, now a
+     declarative table entry instead of hard-coded branches);
+  3. look up a **cached** jitted kernel keyed on
+     (backend, static opts, tuning) — instead of rebuilding
+     ``jax.jit(functools.partial(...))`` on every call, which is what made
+     hot loops (the serve-loop sampler, MoE routing) retrace continuously;
+  4. record instrumentation counters (calls, cache hits, traces) queryable
+     for benchmarks (``benchmarks/dispatch_overhead.py``).
+
+Registered implementations use the normalised signature
+``impl(*operands, **static_opts)``: positional arguments are traced arrays,
+keyword arguments (functions ``f``/``op``, dtypes, flags, scalar units) are
+static and become part of the cache key.  Static values that cannot be
+hashed (e.g. tracers flowing in from an outer trace) fall back to an
+uncached direct call — correct, just not cached, exactly like closing over
+them did before.
+
+Adding a backend (e.g. a GPU-tiled path) is now one registration point
+instead of an edit in every wrapper module.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch
+from repro.kernels import common as KC
+from repro.kernels import hist_kernel, map_kernel, reduce_kernel, scan_kernel
+from repro.kernels import search_kernel, sort_kernel
+from repro.kernels import ref as kref
+
+
+# --------------------------------------------------------------------------
+# Tuning table
+# --------------------------------------------------------------------------
+
+#: Tunables every primitive understands. ``switch_below``: element count
+#: under which a pallas request is demoted to the portable path (0 = never).
+#: ``interpret``: force Pallas interpret mode on/off (None = auto: interpret
+#: everywhere except real TPUs). ``block_rows``/``block_cols``: streaming-
+#: kernel tile geometry (None = the (8, 1024) default in kernels/common.py).
+TUNABLE_KEYS = ("switch_below", "interpret", "block_rows", "block_cols")
+
+_COMMON_DEFAULTS = {
+    "switch_below": 0,
+    "interpret": None,
+    "block_rows": None,
+    "block_cols": None,
+}
+
+
+def _validate_tuning(name: str, kv: dict, allowed=TUNABLE_KEYS) -> None:
+    for k, v in kv.items():
+        if k not in TUNABLE_KEYS:
+            raise KeyError(
+                f"unknown tunable {k!r} for primitive {name!r}; "
+                f"valid keys: {TUNABLE_KEYS}"
+            )
+        if k not in allowed:
+            # e.g. block geometry for the bitonic sort (fixed SORT_* tiles)
+            # or any knob for bincount (no pallas impl): rejecting loudly
+            # beats a silent no-op the user believes took effect
+            raise KeyError(
+                f"primitive {name!r} does not support tunable {k!r} "
+                f"(its kernels ignore it); supported: {tuple(allowed)}"
+            )
+        if k == "switch_below" and (not isinstance(v, int) or v < 0):
+            raise ValueError(f"switch_below must be a non-negative int, got {v!r}")
+        if k == "interpret" and not (v is None or isinstance(v, bool)):
+            # bool('false') is True — reject strings loudly rather than
+            # silently forcing interpret mode on a real TPU
+            raise ValueError(f"interpret must be True/False/None, got {v!r}")
+        if k == "block_rows" and v is not None and (v <= 0 or v % KC.SUBLANES):
+            raise ValueError(f"block_rows must be a multiple of {KC.SUBLANES}")
+        if k == "block_cols" and v is not None and (
+            v < KC.LANES or v & (v - 1) or v % KC.LANES
+        ):
+            raise ValueError(
+                f"block_cols must be a power-of-two multiple of {KC.LANES}"
+            )
+
+
+class TuningTable:
+    """Central per-primitive performance knobs: defaults < global sets <
+    scoped overrides (innermost wins). Thread-local scoping, so concurrent
+    serve loops can tune independently."""
+
+    def __init__(self):
+        self._defaults: dict[str, dict] = {}
+        self._allowed: dict[str, tuple] = {}
+        self._global: dict[str, dict] = {}
+        self._tls = threading.local()
+
+    def _register(self, name: str, defaults: dict | None, allowed) -> None:
+        merged = dict(_COMMON_DEFAULTS)
+        if defaults:
+            _validate_tuning(name, defaults, allowed)
+            merged.update(defaults)
+        self._defaults[name] = merged
+        self._allowed[name] = tuple(allowed)
+
+    def _stack(self) -> list:
+        if not hasattr(self._tls, "stack"):
+            self._tls.stack = []
+        return self._tls.stack
+
+    def _check_name(self, name: str) -> None:
+        if name not in self._defaults:
+            raise KeyError(
+                f"unknown primitive {name!r}; registered: "
+                f"{sorted(self._defaults)}"
+            )
+
+    def lookup(self, name: str) -> dict:
+        self._check_name(name)
+        out = dict(self._defaults[name])
+        out.update(self._global.get(name, {}))
+        for layer in self._stack():
+            out.update(layer.get(name, {}))
+        return out
+
+    def set(self, name: str, **kv) -> None:
+        """Globally override tunables for one primitive."""
+        self._check_name(name)
+        _validate_tuning(name, kv, self._allowed[name])
+        self._global.setdefault(name, {}).update(kv)
+
+    def reset(self, name: str | None = None) -> None:
+        if name is None:
+            self._global.clear()
+        else:
+            self._global.pop(name, None)
+
+    @contextlib.contextmanager
+    def overrides(self, mapping: dict[str, dict] | None = None, **per_prim):
+        """Scoped overrides: ``with tuning.overrides({"mapreduce":
+        {"switch_below": 4096}}): ...`` (or primitive-name kwargs)."""
+        layer: dict[str, dict] = {}
+        for src in (mapping or {}), per_prim:
+            for name, kv in src.items():
+                self._check_name(name)
+                _validate_tuning(name, kv, self._allowed[name])
+                layer.setdefault(name, {}).update(kv)
+        self._stack().append(layer)
+        try:
+            yield self
+        finally:
+            self._stack().pop()
+
+
+tuning = TuningTable()
+
+
+# --------------------------------------------------------------------------
+# Primitive records
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PrimitiveStats:
+    """Instrumentation counters: ``calls`` (every __call__), ``cache_hits``
+    (served an already-built jitted kernel), ``traces`` (actual jax traces —
+    flat counters across repeated same-shape calls prove the retrace
+    elimination), ``uncached`` (unhashable statics → direct call)."""
+
+    calls: int = 0
+    cache_hits: int = 0
+    traces: int = 0
+    uncached: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class _Unhashable:
+    pass
+
+
+_UNHASHABLE = _Unhashable()
+
+
+def _static_key(v: Any):
+    """Hashable cache-key form of a static option, or _UNHASHABLE.
+
+    Tracers AND concrete jax Arrays are both uncacheable: a tracer must
+    never be baked into a cached closure, and reading a device scalar's
+    value (``init=x.max()``) would block on the in-flight computation every
+    call and mint a fresh cache key per distinct value — per-value retrace
+    churn on exactly the hot paths the cache exists for. Host values
+    (Python scalars, 0-d numpy) key by value for free.
+    """
+    if isinstance(v, (jax.core.Tracer, jax.Array)):
+        return _UNHASHABLE
+    try:
+        hash(v)
+        return v
+    except TypeError:
+        pass
+    if isinstance(v, np.ndarray) and v.ndim == 0:
+        return ("scalar", str(v.dtype), v.item())
+    return _UNHASHABLE
+
+
+class Primitive:
+    """One registered AK primitive: both impls + static spec + tunables."""
+
+    def __init__(
+        self,
+        name: str,
+        jnp_impl: Callable,
+        pallas_impl: Callable | None = None,
+        *,
+        tunables: tuple = TUNABLE_KEYS,
+        tuning_defaults: dict | None = None,
+        doc: str = "",
+        cache_size: int = 256,
+    ):
+        self.name = name
+        self.jnp_impl = jnp_impl
+        self.pallas_impl = pallas_impl
+        self.doc = doc
+        # which table knobs this primitive's kernels actually honour —
+        # the table rejects overrides outside this set
+        self.tunables = tuple(tunables) if pallas_impl is not None else ()
+        self.stats = PrimitiveStats()
+        self._cache: OrderedDict[tuple, Callable] = OrderedDict()
+        self._cache_lock = threading.Lock()
+        self._cache_size = cache_size
+        # validated here, installed into the table by register() — a record
+        # that fails registration must not touch the live tuning table
+        if tuning_defaults:
+            _validate_tuning(name, tuning_defaults, self.tunables)
+        self._tuning_defaults = tuning_defaults
+
+    # -- backend selection -------------------------------------------------
+    def _impl(self, backend: str) -> Callable:
+        if backend == "pallas" and self.pallas_impl is not None:
+            return self.pallas_impl
+        return self.jnp_impl
+
+    def _select_backend(self, backend, operands, switch_below: int) -> str:
+        resolved = dispatch.resolve(backend)
+        if resolved != "pallas":
+            return resolved
+        if self.pallas_impl is None:
+            return "jnp"
+        n = operands[0].size if operands else 0
+        # AK's host-finish trade-off: tiny inputs skip the tiled kernel
+        # (and n == 0 always does — nothing to tile).
+        if n == 0 or n < switch_below:
+            return "jnp"
+        return "pallas"
+
+    # -- the single call site ---------------------------------------------
+    def __call__(self, *operands, backend: str | None = None, **opts):
+        with self._cache_lock:  # counters are read-modify-write
+            self.stats.calls += 1
+        tune = tuning.lookup(self.name)
+        switch_below = opts.pop("switch_below", None)
+        if switch_below is None:
+            switch_below = tune["switch_below"]
+        resolved = self._select_backend(backend, operands, switch_below)
+
+        # interpret/block geometry only reach Pallas kernels; keying the
+        # jnp path on them would compile duplicate identical executables
+        # whenever a geometry override is active.
+        if resolved == "pallas":
+            tune_key = (
+                tune["interpret"], tune["block_rows"], tune["block_cols"]
+            )
+            scope = dict(
+                interpret=tune["interpret"],
+                block_rows=tune["block_rows"],
+                block_cols=tune["block_cols"],
+            )
+        else:
+            tune_key = None
+            scope = {}
+        statics = []
+        for k in sorted(opts):
+            h = _static_key(opts[k])
+            if h is _UNHASHABLE:
+                statics = None
+                break
+            statics.append((k, h))
+
+        if statics is None:
+            # Unhashable static (tracer init etc.): direct call, no cache.
+            with self._cache_lock:
+                self.stats.uncached += 1
+            with KC.tuning_scope(**scope):
+                return self._impl(resolved)(*operands, **opts)
+
+        key = (resolved, tuple(statics), tune_key)
+        with self._cache_lock:
+            fn = self._cache.get(key)
+            if fn is not None:
+                self.stats.cache_hits += 1
+                self._cache.move_to_end(key)
+        if fn is not None:
+            return fn(*operands)
+
+        impl, frozen_opts = self._impl(resolved), dict(opts)
+        prim, lock = self, self._cache_lock
+
+        def traced(*arrays):
+            # Runs only when jax (re)traces: an exact trace counter.
+            # ``prim.stats`` (not a captured object) so reset_stats() also
+            # covers retraces of already-cached kernels.
+            with lock:
+                prim.stats.traces += 1
+            with KC.tuning_scope(**scope):
+                return impl(*arrays, **frozen_opts)
+
+        fn = jax.jit(traced)
+        # NOTE: a fresh closure passed as a static (``f=lambda ...`` built
+        # per call) gets a fresh identity and therefore a fresh entry each
+        # call — exactly like handing jax.jit a new function object. The
+        # LRU bounds the damage to ``cache_size`` retained executables per
+        # primitive; hot callers should hoist their closures (see
+        # core/ops.py::_identity).
+        with self._cache_lock:
+            self._cache[key] = fn
+            while len(self._cache) > self._cache_size:
+                self._cache.popitem(last=False)
+        return fn(*operands)
+
+    # -- introspection -----------------------------------------------------
+    def cache_keys(self) -> tuple:
+        return tuple(self._cache)
+
+    def cache_backends(self) -> tuple:
+        """Backends with at least one cached kernel (test observability)."""
+        return tuple(sorted({k[0] for k in self._cache}))
+
+    def clear(self) -> None:
+        with self._cache_lock:
+            self._cache.clear()
+
+    def reset_stats(self) -> None:
+        with self._cache_lock:
+            self.stats = PrimitiveStats()
+
+
+# --------------------------------------------------------------------------
+# Registry surface
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Primitive] = {}
+
+
+def register(prim: Primitive) -> Primitive:
+    if prim.name in _REGISTRY:
+        raise ValueError(f"primitive {prim.name!r} already registered")
+    _REGISTRY[prim.name] = prim
+    tuning._register(prim.name, prim._tuning_defaults, prim.tunables)
+    return prim
+
+
+def get(name: str) -> Primitive:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown primitive {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def call(name: str, *operands, **kw):
+    return get(name)(*operands, **kw)
+
+
+def names() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def stats(name: str | None = None) -> dict:
+    if name is not None:
+        return get(name).stats.as_dict()
+    return {n: p.stats.as_dict() for n, p in sorted(_REGISTRY.items())}
+
+
+def reset_stats() -> None:
+    for p in _REGISTRY.values():
+        p.reset_stats()
+
+
+def clear_caches() -> None:
+    for p in _REGISTRY.values():
+        p.clear()
+
+
+# --------------------------------------------------------------------------
+# Registrations — THE one place each primitive's two implementations and
+# tuned defaults live. core/*.py and kernels/ops.py delegate here.
+# --------------------------------------------------------------------------
+
+def _astype(x, out_dtype):
+    return x.astype(out_dtype) if out_dtype is not None else x
+
+
+def _jnp_map(*arrays, f, out_dtype=None):
+    return _astype(kref.map_ref(f, *arrays), out_dtype)
+
+
+def _pallas_map(*arrays, f, out_dtype=None):
+    return map_kernel.map_blocks(f, *arrays, out_dtype=out_dtype)
+
+
+def _jnp_mapreduce(*arrays, f, op, init, out_dtype=None):
+    return kref.reduce_ref(f, op, *arrays, unit=init, out_dtype=out_dtype)
+
+
+def _pallas_mapreduce(*arrays, f, op, init, out_dtype=None):
+    return reduce_kernel.reduce_blocks(
+        f, op, *arrays, unit=init, out_dtype=out_dtype
+    )
+
+
+def _jnp_accumulate(x, *, op, init, inclusive=True):
+    return kref.scan_ref(op, x, unit=init, exclusive=not inclusive)
+
+
+def _pallas_accumulate(x, *, op, init, inclusive=True):
+    return scan_kernel.scan_blocks(op, x, unit=init, exclusive=not inclusive)
+
+
+def _pallas_argsort(keys):
+    idx = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    _, perm = sort_kernel.bitonic_sort_kv(keys, idx, tie_break=True)
+    return perm
+
+
+def _jnp_minmax_histogram(x, lo, hi, *, nbins):
+    return kref.minmax_histogram_ref(x, nbins, lo, hi)
+
+
+def _pallas_minmax_histogram(x, lo, hi, *, nbins):
+    return hist_kernel.minmax_histogram_blocks(x, nbins, lo, hi)
+
+
+def _bincount_impl(ids, *, nbins):
+    # Linear-memory segment-sum (scatter-add under the hood — XLA's
+    # deterministic sorted-scatter on TPU), replacing the O(n·nbins)
+    # one-hot contraction. Out-of-range ids land in a ghost segment and
+    # are dropped, matching the one-hot semantics exactly.
+    flat = ids.reshape(-1)
+    valid = (flat >= 0) & (flat < nbins)
+    seg = jnp.where(valid, flat, nbins)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(seg, dtype=jnp.int32), seg, num_segments=nbins + 1
+    )
+    return counts[:nbins]
+
+
+map_p = register(Primitive(
+    "map", _jnp_map, _pallas_map,
+    doc="foreachindex/map_elements: tiled elementwise f over arrays",
+))
+
+mapreduce_p = register(Primitive(
+    "mapreduce", _jnp_mapreduce, _pallas_mapreduce,
+    doc="mapreduce(f, op, arrays; init) -> scalar",
+))
+
+accumulate_p = register(Primitive(
+    "accumulate", _jnp_accumulate, _pallas_accumulate,
+    doc="prefix scan (inclusive/exclusive), single pass",
+))
+
+# The bitonic network uses its own fixed SORT_* tiling, so the sort family
+# honours switch_below/interpret but not the streaming block geometry.
+_SORT_TUNABLES = ("switch_below", "interpret")
+
+sort_p = register(Primitive(
+    "sort",
+    lambda x, *, descending=False: kref.sort_ref(x, descending=descending),
+    lambda x, *, descending=False: sort_kernel.bitonic_sort(
+        x, descending=descending
+    ),
+    tunables=_SORT_TUNABLES,
+    doc="1-D sort (AK merge_sort; bitonic network on TPU)",
+))
+
+sort_kv_p = register(Primitive(
+    "sort_kv",
+    lambda k, v, *, tie_break=False: kref.sort_kv_ref(
+        k, v, tie_break=tie_break
+    ),
+    lambda k, v, *, tie_break=False: sort_kernel.bitonic_sort_kv(
+        k, v, tie_break=tie_break
+    ),
+    tunables=_SORT_TUNABLES,
+    doc="key/value pair sort (AK merge_sort_by_key)",
+))
+
+argsort_p = register(Primitive(
+    "argsort", kref.argsort_ref, _pallas_argsort,
+    tunables=_SORT_TUNABLES,
+    doc="stable index permutation (AK sortperm)",
+))
+
+searchsorted_p = register(Primitive(
+    "searchsorted",
+    lambda hay, q, *, side="left": kref.searchsorted_ref(hay, q, side=side),
+    lambda hay, q, *, side="left": search_kernel.searchsorted_blocks(
+        hay, q, side=side
+    ),
+    doc="0-based insertion indices into a sorted haystack",
+))
+
+minmax_histogram_p = register(Primitive(
+    "minmax_histogram", _jnp_minmax_histogram, _pallas_minmax_histogram,
+    doc="one-pass (histogram, min, max) — SIHSort's sampling primitive",
+))
+
+bincount_p = register(Primitive(
+    "bincount", _bincount_impl, None,
+    doc="integer-id counts in [0, nbins) via segment_sum (both backends)",
+))

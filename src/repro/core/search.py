@@ -4,29 +4,24 @@
 "upper bound" is implemented in Thrust but missing from every API-based
 programming model, even though MPISort needs it; AK ships it. So do we —
 it is the partition step of `core.distributed.sihsort` and the offset
-lookup of MoE dispatch.
+lookup of MoE dispatch. Both implementations live as one ``searchsorted``
+record in ``repro.core.registry`` (``side`` is a static option).
 
 Convention: 0-based insertion index (jnp.searchsorted semantics).
 AK/Julia are 1-based; tests pin the relation `first_jl = first_0b + 1`.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
+from repro.core import registry
 
-from repro.core import dispatch
-from repro.kernels import ops as kops
-from repro.kernels import ref as kref
+_searchsorted = registry.get("searchsorted")
 
 
 def searchsortedfirst(hay, queries, *, backend: str | None = None):
     """First index where each query could insert keeping ``hay`` sorted."""
-    if dispatch.resolve(backend) == "pallas":
-        return kops.searchsorted(hay, queries, side="left")
-    return kref.searchsorted_ref(hay, queries, side="left")
+    return _searchsorted(hay, queries, side="left", backend=backend)
 
 
 def searchsortedlast(hay, queries, *, backend: str | None = None):
     """Last such index (insertion after the run of equal keys)."""
-    if dispatch.resolve(backend) == "pallas":
-        return kops.searchsorted(hay, queries, side="right")
-    return kref.searchsorted_ref(hay, queries, side="right")
+    return _searchsorted(hay, queries, side="right", backend=backend)

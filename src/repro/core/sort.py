@@ -4,7 +4,9 @@
 from the paper §II-B.  The TPU specialisation is the blocked bitonic network
 (kernels/sort_kernel.py — DESIGN.md §2 records why a literal merge sort is
 the wrong shape for this hardware); the portable path is ``jnp.sort`` /
-``jnp.argsort`` which XLA lowers to its own sorting network.
+``jnp.argsort`` which XLA lowers to its own sorting network. Both sides are
+registered once in ``repro.core.registry``; these wrappers adapt the public
+signatures and leave dispatch, jit caching and tuning to the registry.
 
 ``topk`` is an extension the LM substrate needs (MoE routing, samplers); it
 is sort-derived, as in AK where it would compose from the same blocks.
@@ -14,25 +16,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import dispatch
-from repro.kernels import ops as kops
-from repro.kernels import ref as kref
+from repro.core import registry
+
+_sort = registry.get("sort")
+_sort_kv = registry.get("sort_kv")
+_argsort = registry.get("argsort")
 
 
 def merge_sort(x, *, descending: bool = False, backend: str | None = None):
     """Sort a 1-D collection (AK ``merge_sort``; allocating form)."""
-    if dispatch.resolve(backend) == "pallas":
-        return kops.sort(x, descending=descending)
-    return kref.sort_ref(x, descending=descending)
+    return _sort(x, descending=descending, backend=backend)
 
 
 def merge_sort_by_key(keys, vals, *, backend: str | None = None):
     """Sort (keys, payload) kept in separate arrays (AK
     ``merge_sort_by_key``). Equal-key payload order is unspecified, exactly
     as in a non-stable parallel sort."""
-    if dispatch.resolve(backend) == "pallas":
-        return kops.sort_kv(keys, vals)
-    return kref.sort_kv_ref(keys, vals)
+    return _sort_kv(keys, vals, backend=backend)
 
 
 def sortperm(x, *, backend: str | None = None):
@@ -41,9 +41,7 @@ def sortperm(x, *, backend: str | None = None):
     Implemented as a by-key sort of (x, iota) with (key, index) lexicographic
     ties — the faster, +50%-memory variant of the paper.
     """
-    if dispatch.resolve(backend) == "pallas":
-        return kops.argsort(x)
-    return kref.argsort_ref(x)
+    return _argsort(x, backend=backend)
 
 
 def sortperm_lowmem(x, *, backend: str | None = None):

@@ -1,7 +1,24 @@
 """Pallas TPU kernels for the AK primitive suite.
 
 Layout per the repo convention: ``<name>_kernel.py`` holds the
-``pl.pallas_call`` + BlockSpec tiling, ``ops.py`` the jit'd public wrappers,
+``pl.pallas_call`` + BlockSpec tiling, ``ops.py`` the public wrappers (now
+thin delegates into the primitive registry, which owns the jit caches),
 ``ref.py`` the pure-jnp oracles the tests sweep against.
+
+``ops`` and ``ref`` are loaded lazily: ``ops`` delegates to
+``repro.core.registry``, which itself imports the kernel modules — eager
+imports here would make that a cycle.
 """
-from repro.kernels import ops, ref  # noqa: F401
+import importlib
+
+_LAZY = ("ops", "ref")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return importlib.import_module(f"repro.kernels.{name}")
+    raise AttributeError(f"module 'repro.kernels' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -8,8 +8,10 @@ path (this box has no TPU).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import math
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -21,15 +23,58 @@ TILE = SUBLANES * LANES  # 1024 elements: the minimum well-shaped f32 tile.
 
 # Default block used by the 1-D streaming kernels (map/reduce/scan/hist):
 # (8, 1024) f32 = 32 KiB per operand — small against ~16 MiB VMEM, so
-# several operands + double-buffering fit comfortably.
+# several operands + double-buffering fit comfortably.  The live values are
+# read through ``block_rows()``/``block_cols()`` so the primitive registry's
+# tuning table (core/registry.py) can re-tile a kernel without editing it.
 BLOCK_ROWS = 8
 BLOCK_COLS = 1024
 BLOCK_ELEMS = BLOCK_ROWS * BLOCK_COLS
 
+_tuning = threading.local()
+
+
+def block_rows() -> int:
+    return getattr(_tuning, "block_rows", None) or BLOCK_ROWS
+
+
+def block_cols() -> int:
+    return getattr(_tuning, "block_cols", None) or BLOCK_COLS
+
+
+def block_elems() -> int:
+    return block_rows() * block_cols()
+
 
 def interpret_mode() -> bool:
-    """Pallas kernels run in interpret mode everywhere except real TPUs."""
+    """Pallas kernels run in interpret mode everywhere except real TPUs
+    (unless a tuning scope pins it explicitly)."""
+    override = getattr(_tuning, "interpret", None)
+    if override is not None:
+        return bool(override)
     return jax.default_backend() != "tpu"
+
+
+@contextlib.contextmanager
+def tuning_scope(*, interpret=None, block_rows=None, block_cols=None):
+    """Scoped kernel-tuning overrides, read at trace time by every kernel in
+    this package. ``None`` keeps the current value. The registry wraps each
+    kernel trace in this scope so the tuning table's knobs take effect
+    without any kernel knowing about the table."""
+    prev = (
+        getattr(_tuning, "interpret", None),
+        getattr(_tuning, "block_rows", None),
+        getattr(_tuning, "block_cols", None),
+    )
+    if interpret is not None:
+        _tuning.interpret = interpret
+    if block_rows is not None:
+        _tuning.block_rows = block_rows
+    if block_cols is not None:
+        _tuning.block_cols = block_cols
+    try:
+        yield
+    finally:
+        _tuning.interpret, _tuning.block_rows, _tuning.block_cols = prev
 
 
 def ceil_div(a: int, b: int) -> int:
@@ -74,6 +119,7 @@ def as_blocks(x: jax.Array, fill) -> tuple[jax.Array, int]:
     relies on.
     """
     n = x.size
+    elems, cols = block_elems(), block_cols()
     flat = x.reshape(-1)
-    padded = pad_to(flat, max(round_up(n, BLOCK_ELEMS), BLOCK_ELEMS), fill)
-    return padded.reshape(-1, BLOCK_COLS), n
+    padded = pad_to(flat, max(round_up(n, elems), elems), fill)
+    return padded.reshape(-1, cols), n

@@ -32,7 +32,7 @@ def _hist_body(nbins, n, x_ref, lo_ref, hi_ref, h_ref, mn_ref, mx_ref):
     i = pl.program_id(0)
     lo, hi = lo_ref[0, 0], hi_ref[0, 0]
     x = x_ref[...]  # (BLOCK_ROWS, BLOCK_COLS)
-    base = i * C.BLOCK_ELEMS
+    base = i * C.block_elems()
     flat = (
         jax.lax.broadcasted_iota(jnp.int32, x.shape, 0) * x.shape[1]
         + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
@@ -76,7 +76,8 @@ def minmax_histogram_blocks(
         raise ValueError(f"nbins {nbins} > {_MAX_BINS}")
     n = x.size
     view, _ = C.as_blocks(x, fill=jnp.zeros((), x.dtype))
-    grid = (view.shape[0] // C.BLOCK_ROWS,)
+    br, bc = C.block_rows(), C.block_cols()
+    grid = (view.shape[0] // br,)
     lo = jnp.asarray(lo, jnp.float32).reshape(1, 1)
     hi = jnp.asarray(hi, jnp.float32).reshape(1, 1)
 
@@ -84,7 +85,7 @@ def minmax_histogram_blocks(
         functools.partial(_hist_body, nbins, n),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((C.BLOCK_ROWS, C.BLOCK_COLS), lambda i: (i, 0)),
+            pl.BlockSpec((br, bc), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],

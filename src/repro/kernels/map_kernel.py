@@ -39,9 +39,10 @@ def map_blocks(f, *arrays: jax.Array, out_dtype=None) -> jax.Array:
             raise ValueError(f"operand shape mismatch: {a.shape} vs {shape}")
         v, _ = C.as_blocks(a, fill=jnp.zeros((), a.dtype))
         views.append(v)
+    br, bc = C.block_rows(), C.block_cols()
     rows = views[0].shape[0]
-    grid = (rows // C.BLOCK_ROWS,)
-    spec = pl.BlockSpec((C.BLOCK_ROWS, C.BLOCK_COLS), lambda i: (i, 0))
+    grid = (rows // br,)
+    spec = pl.BlockSpec((br, bc), lambda i: (i, 0))
 
     out = pl.pallas_call(
         functools.partial(_map_body, f, len(views)),

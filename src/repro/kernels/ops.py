@@ -1,69 +1,63 @@
-"""Public jit'd wrappers over the Pallas kernels.
+"""Public wrappers over the Pallas kernels — registry delegates.
 
-This is the surface `repro.core` dispatches to when the backend policy
-selects the hand-tiled TPU path. Every function has a same-signature oracle
-in `repro.kernels.ref`.
+This is the surface `repro.core` historically dispatched to when the backend
+policy selected the hand-tiled TPU path. Every function now delegates into
+``repro.core.registry`` with ``backend="pallas"`` pinned, so repeated calls
+reuse the registry's cached jitted kernels instead of rebuilding
+``jax.jit(functools.partial(...))`` per call (which retraced every
+invocation). ``switch_below=0`` is pinned too: callers of this module asked
+for the Pallas kernel by name, so an ambient tuning scope (serve/moe
+profiles) must not demote them to the portable path — these wrappers are
+what the pallas-vs-ref sweeps compare. Every function still has a
+same-signature oracle in `repro.kernels.ref`.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import hist_kernel, map_kernel, reduce_kernel, scan_kernel
-from repro.kernels import search_kernel, sort_kernel
+from repro.core import registry
 
 
 def map_elementwise(f, *arrays, out_dtype=None):
     """foreachindex: elementwise f over same-shaped arrays."""
-    fn = jax.jit(
-        functools.partial(map_kernel.map_blocks, f, out_dtype=out_dtype)
+    return registry.call(
+        "map", *arrays, f=f, out_dtype=out_dtype, switch_below=0,
+        backend="pallas",
     )
-    return fn(*arrays)
 
 
 def mapreduce(f, op, *arrays, unit, out_dtype=None):
-    fn = jax.jit(
-        functools.partial(
-            reduce_kernel.reduce_blocks, f, op, unit=unit, out_dtype=out_dtype
-        )
+    return registry.call(
+        "mapreduce", *arrays, f=f, op=op, init=unit, out_dtype=out_dtype,
+        switch_below=0, backend="pallas",
     )
-    return fn(*arrays)
 
 
 def accumulate(op, x, *, unit, exclusive=False):
-    fn = jax.jit(
-        functools.partial(
-            scan_kernel.scan_blocks, op, unit=unit, exclusive=exclusive
-        )
+    return registry.call(
+        "accumulate", x, op=op, init=unit, inclusive=not exclusive,
+        switch_below=0, backend="pallas",
     )
-    return fn(x)
 
 
-@functools.partial(jax.jit, static_argnames=("descending",))
 def sort(keys, *, descending=False):
-    return sort_kernel.bitonic_sort(keys, descending=descending)
+    return registry.call("sort", keys, descending=descending,
+                         switch_below=0, backend="pallas")
 
 
-@functools.partial(jax.jit, static_argnames=("tie_break",))
 def sort_kv(keys, vals, *, tie_break=False):
-    return sort_kernel.bitonic_sort_kv(keys, vals, tie_break=tie_break)
+    return registry.call("sort_kv", keys, vals, tie_break=tie_break,
+                         switch_below=0, backend="pallas")
 
 
-@jax.jit
 def argsort(keys):
     """Index permutation sorting ``keys`` (AK ``sortperm``), stable."""
-    idx = jnp.arange(keys.shape[0], dtype=jnp.int32)
-    _, perm = sort_kernel.bitonic_sort_kv(keys, idx, tie_break=True)
-    return perm
+    return registry.call("argsort", keys, switch_below=0, backend="pallas")
 
 
-@functools.partial(jax.jit, static_argnames=("side",))
 def searchsorted(hay, queries, *, side="left"):
-    return search_kernel.searchsorted_blocks(hay, queries, side=side)
+    return registry.call("searchsorted", hay, queries, side=side,
+                         switch_below=0, backend="pallas")
 
 
-@functools.partial(jax.jit, static_argnames=("nbins",))
 def minmax_histogram(x, nbins, lo, hi):
-    return hist_kernel.minmax_histogram_blocks(x, nbins, lo, hi)
+    return registry.call("minmax_histogram", x, lo, hi, nbins=nbins,
+                         switch_below=0, backend="pallas")

@@ -65,9 +65,10 @@ def reduce_blocks(f, op, *arrays: jax.Array, unit, out_dtype=None) -> jax.Array:
     x0 = arrays[0]
     out_dtype = jnp.dtype(out_dtype or x0.dtype)
     views = [C.as_blocks(a, fill=jnp.asarray(unit, a.dtype))[0] for a in arrays]
+    br, bc = C.block_rows(), C.block_cols()
     rows = views[0].shape[0]
-    grid = (rows // C.BLOCK_ROWS,)
-    spec = pl.BlockSpec((C.BLOCK_ROWS, C.BLOCK_COLS), lambda i: (i, 0))
+    grid = (rows // br,)
+    spec = pl.BlockSpec((br, bc), lambda i: (i, 0))
 
     out = pl.pallas_call(
         functools.partial(_reduce_body, f, op, unit, len(views)),

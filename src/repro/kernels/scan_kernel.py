@@ -76,9 +76,10 @@ def scan_blocks(op, x: jax.Array, *, unit, exclusive: bool = False) -> jax.Array
     """
     shape, n = x.shape, x.size
     view, _ = C.as_blocks(x, fill=jnp.asarray(unit, x.dtype))
+    br, bc = C.block_rows(), C.block_cols()
     rows = view.shape[0]
-    grid = (rows // C.BLOCK_ROWS,)
-    spec = pl.BlockSpec((C.BLOCK_ROWS, C.BLOCK_COLS), lambda i: (i, 0))
+    grid = (rows // br,)
+    spec = pl.BlockSpec((br, bc), lambda i: (i, 0))
 
     out = pl.pallas_call(
         functools.partial(_scan_body, op, unit, False),

@@ -40,7 +40,7 @@ def _search_body(strict, n_hay, q_ref, h_ref, o_ref):
 
     # Mask haystack padding (pad = +max sorts after everything, but equal
     # keys at type-max would miscount searchsortedlast; mask by index).
-    base = hj * C.BLOCK_ELEMS
+    base = hj * C.block_elems()
     flat = _flat_index(h.shape) + base
     valid = flat < n_hay
     # (H_rows, H_cols, Q) comparison is too big; contract haystack first:
@@ -76,13 +76,14 @@ def searchsorted_blocks(
                      C.type_min(queries.dtype))
     qview = q_pad.reshape(-1, _Q_TILE)
 
-    grid = (qview.shape[0], hview.shape[0] // C.BLOCK_ROWS)
+    br, bc = C.block_rows(), C.block_cols()
+    grid = (qview.shape[0], hview.shape[0] // br)
     out = pl.pallas_call(
         functools.partial(_search_body, strict, n_hay),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, _Q_TILE), lambda qi, hj: (qi, 0)),
-            pl.BlockSpec((C.BLOCK_ROWS, C.BLOCK_COLS), lambda qi, hj: (hj, 0)),
+            pl.BlockSpec((br, bc), lambda qi, hj: (hj, 0)),
         ],
         out_specs=pl.BlockSpec((1, _Q_TILE), lambda qi, hj: (qi, 0)),
         out_shape=jax.ShapeDtypeStruct(qview.shape, jnp.int32),

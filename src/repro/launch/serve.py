@@ -22,7 +22,21 @@ import jax
 import jax.numpy as jnp
 
 from repro import core as ak
+from repro.core import registry
 from repro.models import model as M
+
+# Registry tuning for the decode-step sampler. Per step the sampler touches
+# vocab-sized rows (tens of K elements): plenty for the tiled kernels, but
+# the bitonic network's n·log²n work only beats XLA's sort once launches
+# amortise — so small rows demote to the portable path (AK's switch_below,
+# as a declarative table instead of branches). The registry's jit cache does
+# the rest: every primitive here traces once for the whole serve loop
+# instead of once per decode step.
+SAMPLER_TUNING = {
+    "argsort": {"switch_below": 4096},
+    "accumulate": {"switch_below": 4096},
+    "searchsorted": {"switch_below": 4096},
+}
 
 
 def sample_logits(rng, logits, *, temperature=1.0, top_k=0, top_p=1.0,
@@ -44,7 +58,9 @@ def sample_logits(rng, logits, *, temperature=1.0, top_k=0, top_p=1.0,
         def one(row):
             order = ak.sortperm(-row)            # descending — AK sortperm
             probs = jax.nn.softmax(row[order])
-            cum = ak.accumulate(jnp.add, probs, init=jnp.float32(0.0))
+            # host-scalar init keeps one registry cache key (a device
+            # scalar would route to the uncached path)
+            cum = ak.accumulate(jnp.add, probs, init=0.0)
             # first index where cumulative mass exceeds top_p — AK search
             cut = ak.searchsortedfirst(cum, jnp.float32(top_p)[None])[0]
             keep_sorted = jnp.arange(row.shape[0]) <= cut
@@ -68,9 +84,24 @@ class ServeStats:
 
 def serve_loop(params, cfg, prompts, *, max_new: int = 32, cache_len: int,
                temperature=1.0, top_k=0, top_p=1.0, seed=0,
-               frames=None, patches=None):
+               frames=None, patches=None, ak_tuning=None):
     """prompts: (B, S_prompt) int32. Returns (generated (B, max_new), stats).
+
+    ``ak_tuning``: per-primitive registry overrides for the sampler's AK
+    primitives ({primitive: {tunable: value}}); defaults to SAMPLER_TUNING.
     """
+    with registry.tuning.overrides(
+        SAMPLER_TUNING if ak_tuning is None else ak_tuning
+    ):
+        return _serve_loop(
+            params, cfg, prompts, max_new=max_new, cache_len=cache_len,
+            temperature=temperature, top_k=top_k, top_p=top_p, seed=seed,
+            frames=frames, patches=patches,
+        )
+
+
+def _serve_loop(params, cfg, prompts, *, max_new, cache_len, temperature,
+                top_k, top_p, seed, frames, patches):
     B, S = prompts.shape
     rng = jax.random.PRNGKey(seed)
 

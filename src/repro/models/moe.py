@@ -30,8 +30,21 @@ import jax
 import jax.numpy as jnp
 
 from repro import core as ak
+from repro.core import registry
 from repro.models import layers as L
 from repro.models import sharding as SH
+
+# Registry tuning for the routing core. Routing arrays are (T·k,)-sized —
+# a few thousand elements per layer call at smoke/serve scale — so the
+# hand-tiled sort/scan paths only pay off above a healthy cut-off; below it
+# the portable path avoids kernel-launch latency (AK's switch_below knob,
+# drawn from the central table instead of per-call branches). The registry
+# also caches the jitted kernels, so every MoE layer and every train step
+# shares one trace per (primitive, backend, statics) key.
+ROUTING_TUNING = {
+    "argsort": {"switch_below": 2048},
+    "accumulate": {"switch_below": 2048},
+}
 
 
 def moe_init(rng, cfg):
@@ -98,12 +111,13 @@ def _dispatch_indices(cfg, ids, T, capacity):
     capacity slots. Returns (perm, slot, keep) over the (T*k,) flat axis."""
     k = cfg.top_k
     flat_ids = ids.reshape(-1)  # (T*k,)
-    perm = ak.sortperm(flat_ids)  # stable sort by expert — AK sortperm
-    sorted_ids = flat_ids[perm]
-    counts = ak.bincount(flat_ids, cfg.n_experts)  # AK histogram
-    offsets = ak.accumulate(
-        jnp.add, counts, init=jnp.int32(0), inclusive=False
-    )  # AK exclusive scan
+    with registry.tuning.overrides(ROUTING_TUNING):
+        perm = ak.sortperm(flat_ids)  # stable sort by expert — AK sortperm
+        sorted_ids = flat_ids[perm]
+        counts = ak.bincount(flat_ids, cfg.n_experts)  # AK histogram
+        offsets = ak.accumulate(
+            jnp.add, counts, init=0, inclusive=False
+        )  # AK exclusive scan (host-scalar init -> one registry cache key)
     pos_in_expert = jnp.arange(T * k, dtype=jnp.int32) - offsets[sorted_ids]
     keep = pos_in_expert < capacity
     slot = sorted_ids * capacity + jnp.minimum(pos_in_expert, capacity - 1)

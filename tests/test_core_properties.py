@@ -7,7 +7,12 @@ returns valid insertion points; any/all agree with Python semantics.
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional test dep (pip install .[test])"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro import core as ak
 from repro.core import dispatch

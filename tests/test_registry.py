@@ -1,0 +1,277 @@
+"""The primitive registry: backend resolution, jit-cache behaviour, tuning.
+
+These pin the tentpole contracts:
+  * one call site per primitive resolves auto/jnp/pallas (scoped
+    ``dispatch.backend(...)`` overrides included) through the registry;
+  * repeated same-shape calls trigger exactly ONE jax trace per
+    (primitive, backend, statics) key — the retrace-elimination claim;
+  * the tuning table's knobs (switch_below demotion, interpret, block
+    geometry) are scoped, validated, and part of the cache key.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as ak
+from repro.core import dispatch, registry
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    registry.clear_caches()
+    registry.reset_stats()
+    registry.tuning.reset()
+    yield
+    registry.tuning.reset()
+
+
+# -- registration surface ---------------------------------------------------
+
+def test_all_paper_primitives_registered():
+    assert set(registry.names()) >= {
+        "map", "mapreduce", "accumulate", "sort", "sort_kv", "argsort",
+        "searchsorted", "minmax_histogram", "bincount",
+    }
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        registry.register(registry.Primitive("sort", lambda x: x))
+
+
+def test_rejected_duplicate_does_not_clobber_tuning():
+    dup = registry.Primitive(
+        "mapreduce", lambda x: x, lambda x: x,
+        tuning_defaults={"block_cols": 256},
+    )
+    with pytest.raises(ValueError):
+        registry.register(dup)
+    assert registry.tuning.lookup("mapreduce")["block_cols"] is None
+
+
+def test_kops_pallas_surface_ignores_switch_below_scope():
+    # kernels.ops asked for the pallas kernel by name; an ambient demoting
+    # tuning scope (e.g. the serve sampler profile) must not reroute it.
+    from repro.kernels import ops as kops
+
+    x = jnp.arange(100.0)
+    with registry.tuning.overrides(mapreduce={"switch_below": 10_000}):
+        kops.mapreduce(jnp.sin, jnp.add, x, unit=0.0)
+    assert registry.get("mapreduce").cache_backends() == ("pallas",)
+
+
+# -- backend resolution -----------------------------------------------------
+
+def test_explicit_backend_routes_to_matching_cache():
+    x = jnp.arange(64.0)
+    ak.merge_sort(x, backend="jnp")
+    assert registry.get("sort").cache_backends() == ("jnp",)
+    ak.merge_sort(x, backend="pallas")
+    assert registry.get("sort").cache_backends() == ("jnp", "pallas")
+
+
+def test_scoped_dispatch_override_reaches_registry():
+    x = jnp.arange(64.0)
+    with dispatch.backend("pallas"):
+        ak.merge_sort(x)
+    assert "pallas" in registry.get("sort").cache_backends()
+
+
+def test_auto_matches_dispatch_resolution():
+    x = jnp.arange(64.0)
+    ak.merge_sort(x)  # auto
+    assert registry.get("sort").cache_backends() == (dispatch.resolve(None),)
+
+
+def test_backends_agree_numerically():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    np.testing.assert_allclose(
+        np.asarray(ak.merge_sort(x, backend="jnp")),
+        np.asarray(ak.merge_sort(x, backend="pallas")),
+        rtol=1e-6,
+    )
+
+
+def test_no_pallas_impl_falls_back_to_portable():
+    ids = jnp.array([0, 1, 1, 3], jnp.int32)
+    got = ak.bincount(ids, 4, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(got), [1, 2, 0, 1])
+    assert registry.get("bincount").cache_backends() == ("jnp",)
+
+
+# -- jit-cache behaviour ----------------------------------------------------
+
+def test_repeated_calls_trace_once():
+    x = jnp.arange(5000.0)
+    for _ in range(8):
+        ak.map_elements(jnp.sin, x, backend="jnp")
+        ak.reduce(jnp.add, x, init=0.0, backend="jnp")
+        ak.accumulate(jnp.add, x, init=0.0, backend="jnp")
+    for name in ("map", "mapreduce", "accumulate"):
+        s = registry.stats(name)
+        assert s["calls"] == 8 and s["traces"] == 1, (name, s)
+        assert s["cache_hits"] == 7, (name, s)
+
+
+def test_repeated_pallas_calls_trace_once():
+    x = jnp.arange(5000.0)
+    for _ in range(4):
+        ak.accumulate(jnp.add, x, init=0.0, backend="pallas")
+    s = registry.stats("accumulate")
+    assert s["traces"] == 1 and s["cache_hits"] == 3, s
+
+
+def test_new_static_opts_get_their_own_key():
+    x = jnp.arange(256.0)
+    ak.merge_sort(x, backend="jnp")
+    ak.merge_sort(x, backend="jnp", descending=True)
+    keys = registry.get("sort").cache_keys()
+    assert len(keys) == 2
+
+
+def test_new_shape_retraces_without_new_cache_entry():
+    ak.accumulate(jnp.add, jnp.arange(100.0), init=0.0, backend="jnp")
+    ak.accumulate(jnp.add, jnp.arange(200.0), init=0.0, backend="jnp")
+    s = registry.stats("accumulate")
+    assert s["traces"] == 2
+    assert len(registry.get("accumulate").cache_keys()) == 1
+
+
+def test_host_scalar_init_is_cacheable():
+    x = jnp.arange(100.0)
+    for init in (0.0, np.float32(0.0)):  # Python + 0-d numpy: same key
+        for _ in range(3):
+            ak.accumulate(jnp.add, x, init=init, backend="jnp")
+    s = registry.stats("accumulate")
+    assert s["traces"] == 1 and s["uncached"] == 0, s
+
+
+def test_device_scalar_init_routes_uncached():
+    # a computed device scalar (init=x.max()) must neither block on the
+    # device for a cache key nor mint a fresh compiled kernel per value
+    x = jnp.arange(100.0)
+    for i in range(3):
+        got = ak.reduce(jnp.minimum, x + i, init=(x + i).max(),
+                        backend="jnp")
+        assert float(got) == float(i)
+    s = registry.stats("mapreduce")
+    assert s["uncached"] == 3, s
+    assert len(registry.get("mapreduce").cache_keys()) == 0
+
+
+def test_tracer_init_takes_uncached_path():
+    x = jnp.arange(100.0)
+
+    @jax.jit
+    def f(v, unit):
+        return ak.accumulate(jnp.add, v, init=unit, backend="jnp")
+
+    np.testing.assert_allclose(
+        np.asarray(f(x, jnp.float32(0.0))), np.cumsum(np.asarray(x)),
+        rtol=1e-6,
+    )
+    assert registry.stats("accumulate")["uncached"] >= 1
+
+
+def test_stable_function_identity_shares_key_fresh_lambda_does_not():
+    x = jnp.arange(100.0)
+    ak.map_elements(jnp.sin, x, backend="jnp")
+    ak.map_elements(jnp.sin, x, backend="jnp")
+    assert len(registry.get("map").cache_keys()) == 1
+    ak.map_elements(lambda a: a, x, backend="jnp")
+    ak.map_elements(lambda a: a, x, backend="jnp")  # distinct identity
+    assert len(registry.get("map").cache_keys()) == 3
+
+
+# -- tuning table -----------------------------------------------------------
+
+def test_switch_below_demotes_small_pallas_calls():
+    x = jnp.arange(100.0)
+    with registry.tuning.overrides(mapreduce={"switch_below": 1000}):
+        got = ak.reduce(jnp.add, x, init=0.0, backend="pallas")
+    assert float(got) == float(x.sum())
+    assert registry.get("mapreduce").cache_backends() == ("jnp",)
+
+
+def test_per_call_switch_below_beats_table():
+    x = jnp.arange(100.0)
+    registry.tuning.set("mapreduce", switch_below=1000)
+    ak.reduce(jnp.add, x, init=0.0, switch_below=0, backend="pallas")
+    assert registry.get("mapreduce").cache_backends() == ("pallas",)
+
+
+def test_tuning_scope_restores_on_exit():
+    with registry.tuning.overrides(sort={"switch_below": 77}):
+        assert registry.tuning.lookup("sort")["switch_below"] == 77
+        with registry.tuning.overrides(sort={"switch_below": 11}):
+            assert registry.tuning.lookup("sort")["switch_below"] == 11
+        assert registry.tuning.lookup("sort")["switch_below"] == 77
+    assert registry.tuning.lookup("sort")["switch_below"] == 0
+
+
+def test_tuning_is_part_of_pallas_cache_key():
+    x = jnp.arange(5000.0)
+    ak.map_elements(jnp.sin, x, backend="pallas")
+    with registry.tuning.overrides(map={"block_cols": 256}):
+        ak.map_elements(jnp.sin, x, backend="pallas")
+    assert len(registry.get("map").cache_keys()) == 2
+    assert registry.stats("map")["traces"] == 2
+
+
+def test_geometry_knobs_do_not_fragment_jnp_cache():
+    # interpret/block shape never reach the portable impls — overriding
+    # them must not recompile an identical jnp executable
+    x = jnp.arange(5000.0)
+    ak.map_elements(jnp.sin, x, backend="jnp")
+    with registry.tuning.overrides(map={"block_cols": 256,
+                                        "interpret": True}):
+        ak.map_elements(jnp.sin, x, backend="jnp")
+    assert len(registry.get("map").cache_keys()) == 1
+    assert registry.stats("map")["traces"] == 1
+
+
+def test_block_retile_preserves_results():
+    x = jax.random.normal(jax.random.PRNGKey(1), (3000,))
+    base = np.asarray(ak.accumulate(jnp.add, x, init=0.0, backend="pallas"))
+    with registry.tuning.overrides(accumulate={"block_cols": 512}):
+        tiled = np.asarray(
+            ak.accumulate(jnp.add, x, init=0.0, backend="pallas")
+        )
+    np.testing.assert_allclose(base, tiled, rtol=1e-5, atol=1e-5)
+
+
+def test_tuning_validation():
+    with pytest.raises(KeyError):
+        registry.tuning.set("sort", warp_size=32)
+    with pytest.raises(KeyError):
+        registry.tuning.set("not_a_primitive", switch_below=1)
+    with pytest.raises(ValueError):
+        registry.tuning.set("map", block_cols=100)  # not pow2·128
+    with pytest.raises(ValueError):
+        registry.tuning.set("map", switch_below=-1)
+    with pytest.raises(ValueError):
+        registry.tuning.set("map", interpret="false")  # bool('false') trap
+    with pytest.raises(KeyError):
+        # the bitonic network has fixed tiles; geometry knobs must not
+        # silently no-op
+        registry.tuning.set("sort", block_rows=16)
+    with pytest.raises(KeyError):
+        registry.tuning.set("bincount", switch_below=8)  # no pallas impl
+
+
+def test_empty_input_demotes_to_portable():
+    got = ak.merge_sort(jnp.zeros((0,), jnp.float32), backend="pallas")
+    assert got.shape == (0,)
+    assert registry.get("sort").cache_backends() in ((), ("jnp",))
+
+
+# -- instrumentation --------------------------------------------------------
+
+def test_stats_query_shapes():
+    ak.merge_sort(jnp.arange(16.0), backend="jnp")
+    all_stats = registry.stats()
+    assert set(all_stats) == set(registry.names())
+    assert all_stats["sort"]["calls"] == 1
+    registry.reset_stats()
+    assert registry.stats("sort")["calls"] == 0
