@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
     table2.*        — §III arithmetic kernels (RBF + LJG)          [Table II]
     dispatch.*      — registry jit-cache vs per-call re-jit overhead
+    sort_throughput.* — fused-network launch/HBM gate (BENCH_sort.json)
     fig_scaling.*   — distributed-sort weak/strong scaling         [Figs 1-3]
     fig4.*          — max sorting throughput                       [Fig 4]
     fig5.*          — cost-normalised accelerator crossover        [Fig 5]
@@ -13,9 +14,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 Sizes are CPU-container scale; the harness structure (not absolute numbers)
 reproduces the paper's tables. TPU-derived numbers live in EXPERIMENTS.md.
+
+``--quick`` runs only the dispatch + sort-gate rows (the CI benchmark smoke
+job: scripts must not bit-rot unexecuted, and the sort gate must hold on
+every push) at a reduced size, without touching BENCH_sort.json.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -46,12 +52,26 @@ def roofline_rows(path="results/roofline"):
     return rows
 
 
-def main() -> None:
-    from benchmarks import arithmetic, cost, dispatch_overhead, scaling
-    from benchmarks import throughput
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="dispatch + sort-gate rows only (CI smoke)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import dispatch_overhead, sort_throughput
+
+    if args.quick:
+        _emit(dispatch_overhead.run(n=16_384, iters=10))
+        # smaller n keeps CI wall-time sane; the gate ratio is asserted at
+        # every size, the checked-in BENCH_sort.json records the full 2^20
+        _emit(sort_throughput.run(n=2**17, repeats=1, json_path=None))
+        return
+
+    from benchmarks import arithmetic, cost, scaling, throughput
 
     _emit(arithmetic.run(n=1_000_000))
     _emit(dispatch_overhead.run())
+    _emit(sort_throughput.run())
     _emit(scaling.run("weak", n_per_rank=32_768, devcounts=(1, 2, 4, 8)))
     _emit(scaling.run("strong", total=262_144, devcounts=(1, 2, 4, 8)))
     _emit(throughput.run(devcounts=(4,), sizes=(16_384, 65_536)))

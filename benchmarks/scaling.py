@@ -24,12 +24,12 @@ _WORKER = """
 import json, time
 import numpy as np, jax, jax.numpy as jnp
 from repro import core as ak
+from repro.core import compat
 
 cfg = json.loads({cfg!r})
 n_per = cfg["n_per_rank"]
 ndev = cfg["ndev"]
-mesh = jax.make_mesh((ndev,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((ndev,), ("data",))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=ndev * n_per).astype(np.float32))
 

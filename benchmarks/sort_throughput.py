@@ -1,0 +1,179 @@
+"""Sort-throughput gate — counted launches, modelled HBM traffic, GB/s.
+
+The paper's headline number is sorting throughput; the thing that decides
+it on-device is how many kernel launches and full-array HBM round-trips the
+network makes. This benchmark pins both, *counted not estimated*:
+
+  * launches: ``sort_kernel`` increments a counter per ``pl.pallas_call``;
+    tracing the sort under ``jax.eval_shape`` counts exactly the launches
+    one execution performs (no execution needed);
+  * the hyper-fused network (``sort_hyper=m``, default 3, tail-absorbing)
+    is compared against the seed-equivalent layout (``sort_hyper=0``: one
+    launch per cross stage + a separate in-block finish per k-phase);
+  * sorted-output equality vs ``np.sort`` is asserted in the same run;
+  * counted launches are cross-checked against the closed form
+    ``sort_kernel.cross_launches`` (the DESIGN.md §2a formula).
+
+HBM traffic model (per launch the kernel streams every block in once and
+out once): ``2 · n · itemsize`` bytes. The seed network ADDITIONALLY paid
+``3 · n · itemsize`` per cross stage for the ``_merge_pair_halves``
+recombine (read both duplicated outputs + write the merged array) — that
+pass is gone, outputs are written through the kernel's own BlockSpecs with
+``input_output_aliases``; the model reports what it would have cost.
+
+Gate (also asserted when run under ``benchmarks.run --quick`` in CI): the
+fused network must issue ≤ half the launches of the seed layout. Every run
+appends a row to ``BENCH_sort.json`` so later PRs have a trajectory to
+diff against.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import common as KC
+from repro.kernels import sort_kernel as SK
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_sort.json")
+
+
+def _count_launches(n: int, dtype, hyper: int) -> int:
+    """Trace-time launch count of one n-element sort at hyper order m."""
+    x = jax.ShapeDtypeStruct((n,), dtype)
+    with KC.tuning_scope(sort_hyper=hyper):
+        SK.reset_launch_count()
+        # fresh lambda per count: eval_shape caches on function identity
+        jax.eval_shape(lambda a: SK.bitonic_sort(a), x)
+        return SK.launch_count()
+
+
+def _hbm_model(n: int, itemsize: int, launches: int, merge_stages: int = 0):
+    """Bytes moved: every launch streams the array in and out once; each
+    (removed) merge pass read two full-size kernel outputs and wrote the
+    recombined array."""
+    return 2 * n * itemsize * launches + 3 * n * itemsize * merge_stages
+
+
+def _cross_stage_count(n: int, block: int) -> int:
+    """Number of cross-block stages of the full network (the merge passes
+    the seed paid)."""
+    total = max(KC.next_pow2(n), block)
+    stages, k = 0, 2 * block
+    while k <= total:
+        stages += (k // block).bit_length() - 1
+        k *= 2
+    return stages
+
+
+def run(n: int = 2**20, dtype=jnp.float32, repeats: int = 3,
+        hyper: int | None = None, json_path: str | None = BENCH_JSON):
+    """Returns benchmark rows [(name, us, derived), ...]; asserts the gate."""
+    hyper = SK.HYPER_ORDER if hyper is None else hyper
+    itemsize = jnp.dtype(dtype).itemsize
+    block = SK.SORT_BLOCK
+
+    fused = _count_launches(n, dtype, hyper)
+    seed = _count_launches(n, dtype, 0)
+    assert fused == SK.cross_launches(n, hyper=hyper), "count != closed form"
+    assert seed == SK.cross_launches(n, hyper=0), "count != closed form"
+    # THE GATE: fusion must never lose, and must at least halve the launch
+    # count once there are enough cross phases for windows to bite (n >=
+    # 4 blocks; below that both layouts are 1-3 launches and the ratio is
+    # meaningless — a 2-block sort is 2 fused vs 3 seed launches).
+    assert fused <= seed, (
+        f"fused network regressed: {fused} launches vs seed {seed}"
+    )
+    if n >= 4 * block:
+        assert 2 * fused <= seed, (
+            f"fused network regressed: {fused} launches vs seed {seed}"
+        )
+
+    merge_stages = _cross_stage_count(n, block)
+    hbm_fused = _hbm_model(n, itemsize, fused)
+    hbm_seed = _hbm_model(n, itemsize, seed, merge_stages)
+
+    # Correctness + wall time in the same run (jit of the interpret-mode
+    # kernels compiles to real XLA on CPU; on TPU this is the real kernel).
+    rng = np.random.default_rng(0)
+    x_host = (rng.normal(size=n) * 1000).astype(jnp.dtype(dtype).name)
+    x = jnp.asarray(x_host)
+
+    def timed(m):
+        with KC.tuning_scope(sort_hyper=m):
+            fn = jax.jit(lambda a: SK.bitonic_sort(a))
+            out = jax.block_until_ready(fn(x))  # warm/compile
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                jax.block_until_ready(fn(x))
+            dt = (time.perf_counter() - t0) / repeats
+        return out, dt
+
+    out_fused, t_fused = timed(hyper)
+    np.testing.assert_array_equal(np.asarray(out_fused), np.sort(x_host))
+    _, t_seed = timed(0)
+
+    gbps = 2 * n * itemsize / t_fused / 1e9  # one read + one write of n
+    rows = [
+        (
+            f"sort_throughput.fused_m{hyper}.n{n}",
+            t_fused * 1e6,
+            f"{gbps:.3f}GB/s launches={fused} "
+            f"modelled_hbm={hbm_fused / 1e6:.1f}MB",
+        ),
+        (
+            f"sort_throughput.seed_m0.n{n}",
+            t_seed * 1e6,
+            f"launches={seed} modelled_hbm={hbm_seed / 1e6:.1f}MB "
+            f"(incl. {merge_stages} merge passes, now deleted)",
+        ),
+        (
+            "sort_throughput.gate",
+            0.0,
+            f"fused/seed launches = {fused}/{seed} "
+            f"{'<= 1/2' if n >= 4 * block else '(no-lose, tiny n)'}: PASS; "
+            f"np.sort equality: PASS",
+        ),
+    ]
+
+    if json_path:
+        _append_json(json_path, {
+            "n": n,
+            "dtype": str(jnp.dtype(dtype)),
+            "hyper": hyper,
+            "launches_fused": fused,
+            "launches_seed": seed,
+            "cross_stages": merge_stages,
+            "modelled_hbm_bytes_fused": hbm_fused,
+            "modelled_hbm_bytes_seed": hbm_seed,
+            "mean_s_fused": t_fused,
+            "mean_s_seed": t_seed,
+            "gbps_fused": gbps,
+            "equal_to_npsort": True,
+            "backend": jax.default_backend(),
+        })
+    return rows
+
+
+def _append_json(path: str, entry: dict) -> None:
+    doc = {"schema": 1, "entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            pass
+    doc.setdefault("entries", []).append(entry)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

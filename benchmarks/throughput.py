@@ -18,12 +18,6 @@ def run(devcounts=(4,), dtypes=("float32",),
         sizes=(16_384, 65_536, 262_144)):
     rows = []
     # single-rank numpy sort = the paper's "CC-JB" CPU baseline (black bar)
-    rng = np.random.default_rng(0)
-    for n in sizes:
-        x = rng.normal(size=n).astype(np.float32)
-        t0 = time.perf_counter()
-        np.sort(x)
-        dt = time.perf_counter() - t0
     best_np = max(
         (n * 4 / _t_numpy(n) / 1e9, n) for n in sizes
     )

@@ -22,9 +22,9 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro import core as ak  # noqa: E402
+from repro.core import compat  # noqa: E402
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 n = 8 * 65_536
 

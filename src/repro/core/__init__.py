@@ -21,8 +21,10 @@ from repro.core.ops import (
 )
 from repro.core.sort import (
     merge_sort,
+    merge_sort_batched,
     merge_sort_by_key,
     sortperm,
+    sortperm_batched,
     sortperm_lowmem,
     topk,
 )
@@ -40,7 +42,8 @@ __all__ = [
     "registry", "tuning",
     "accumulate", "all_pred", "any_pred", "foreachindex", "map_elements",
     "mapreduce", "reduce",
-    "merge_sort", "merge_sort_by_key", "sortperm", "sortperm_lowmem", "topk",
+    "merge_sort", "merge_sort_batched", "merge_sort_by_key", "sortperm",
+    "sortperm_batched", "sortperm_lowmem", "topk",
     "searchsortedfirst", "searchsortedlast",
     "bincount", "minmax_histogram",
     "ShardedSort", "collect_sorted", "sihsort", "sihsort_sharded",

@@ -1,0 +1,50 @@
+"""Version compatibility shims for the distributed layer.
+
+The mesh/shard_map surface moved between jax releases: ``jax.shard_map``
+(with ``check_vma``) and ``jax.lax.axis_size`` are the current spellings,
+older releases (≤ 0.4.x) spell them ``jax.experimental.shard_map.shard_map``
+(with ``check_rep``) and have no axis-size helper at all, and
+``jax.sharding.AxisType`` does not exist yet. Everything that crosses that
+surface goes through this module so the distributed sort (and its tests)
+run on both — the container pins an older jax than the code was written
+against, and a TPU pod will pin a newer one.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` when available, else the experimental spelling
+    (whose replication check is called ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis from inside shard_map."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    from jax._src import core as _core
+
+    return _core.get_axis_env().axis_size(axis_name)
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where the release
+    supports them (newer jax defaults every axis to Auto anyway)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(shape, axis_names)

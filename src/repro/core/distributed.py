@@ -41,10 +41,25 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.core import histogram as H
+from repro.core import registry
 from repro.core import search as S
 from repro.core import sort as SRT
 from repro.kernels import common as KC
+
+# Default registry tuning for the rank-local sorts (steps 1 and 6). Shards
+# at serve scale are tens of Ki elements — worth the fused hyper-block
+# network — but the tail re-sort of a lightly-filled capacity buffer can be
+# tiny, where kernel-launch latency loses to the portable path (AK's
+# switch_below). sort_hyper is left at the kernel default (fused). Callers
+# retune via ``sihsort(..., ak_tuning={...})`` (``{}`` = no profile, outer
+# scopes/globals apply untouched) — the profile must not silently shadow a
+# user's own tuning, so it is a default, not a forced innermost layer.
+SIHSORT_TUNING = {
+    "sort": {"switch_below": 4096},
+    "sort_kv": {"switch_below": 4096},
+}
 
 
 class ShardedSort(NamedTuple):
@@ -106,22 +121,31 @@ def sihsort(
     refine_rounds: int = 16,
     local_sort: Callable | None = None,
     backend: str | None = None,
+    ak_tuning: dict | None = None,
 ) -> ShardedSort:
     """Distributed sort of the global array sharded as ``x`` along
-    ``axis_name``. Must be called inside ``shard_map``. See module docs."""
-    nranks = jax.lax.axis_size(axis_name)
+    ``axis_name``. Must be called inside ``shard_map``. See module docs.
+
+    ``ak_tuning``: per-primitive registry overrides for the rank-local
+    sorts ({primitive: {tunable: value}}); defaults to SIHSORT_TUNING,
+    pass ``{}`` to defer entirely to ambient scopes/globals."""
+    nranks = compat.axis_size(axis_name)
     n_local = x.shape[0]
+    local_tuning = SIHSORT_TUNING if ak_tuning is None else ak_tuning
 
     # -- 1. rank-local sort (composable local sorter, the paper's point) --
-    if payload is None:
-        sorter = local_sort or (lambda v: SRT.merge_sort(v, backend=backend))
-        res = sorter(x)
-        xs, ps = res if isinstance(res, tuple) else (res, None)
-    else:
-        sorter = local_sort or (
-            lambda v, p: SRT.merge_sort_by_key(v, p, backend=backend)
-        )
-        xs, ps = sorter(x, payload)
+    with registry.tuning.overrides(local_tuning):
+        if payload is None:
+            sorter = local_sort or (
+                lambda v: SRT.merge_sort(v, backend=backend)
+            )
+            res = sorter(x)
+            xs, ps = res if isinstance(res, tuple) else (res, None)
+        else:
+            sorter = local_sort or (
+                lambda v, p: SRT.merge_sort_by_key(v, p, backend=backend)
+            )
+            xs, ps = sorter(x, payload)
 
     # -- 2. fused global min/max: ONE collective (negated-min packing) -----
     xf32 = xs.astype(jnp.float32)
@@ -173,12 +197,13 @@ def sihsort(
     # -- 6. final local sort of received runs -------------------------------
     flat = recv.reshape(-1)
     # re-pad: entries past each sender's count are already type-max
-    if ps is None:
-        out = SRT.merge_sort(flat, backend=backend)
-        out_p = None
-    else:
-        out, out_p = SRT.merge_sort_by_key(flat, recv_p.reshape(-1),
-                                           backend=backend)
+    with registry.tuning.overrides(local_tuning):
+        if ps is None:
+            out = SRT.merge_sort(flat, backend=backend)
+            out_p = None
+        else:
+            out, out_p = SRT.merge_sort_by_key(flat, recv_p.reshape(-1),
+                                               backend=backend)
     n_valid = jnp.sum(recv_counts).astype(jnp.int32)
     return ShardedSort(out, out_p, n_valid, overflow.astype(jnp.int32))
 
@@ -219,7 +244,7 @@ def sihsort_sharded(
     )
     # check_vma=False: the Pallas local sorters don't annotate
     # varying-across-mesh metadata on their outputs
-    return jax.shard_map(
+    return compat.shard_map(
         run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )(*args)

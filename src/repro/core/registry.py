@@ -65,16 +65,33 @@ from repro.kernels import ref as kref
 #: Tunables every primitive understands. ``switch_below``: element count
 #: under which a pallas request is demoted to the portable path (0 = never).
 #: ``interpret``: force Pallas interpret mode on/off (None = auto: interpret
-#: everywhere except real TPUs). ``block_rows``/``block_cols``: streaming-
-#: kernel tile geometry (None = the (8, 1024) default in kernels/common.py).
-TUNABLE_KEYS = ("switch_below", "interpret", "block_rows", "block_cols")
+#: everywhere except real TPUs). ``block_rows``/``block_cols``: kernel tile
+#: geometry (None = the (8, 1024) default in kernels/common.py).
+#: ``sort_hyper``: the bitonic network's hyper-block order m — each cross
+#: launch fuses up to m stages over 2^m blocks in VMEM (None = the kernel's
+#: default, 0 = the unfused one-launch-per-stage baseline; sort family only).
+TUNABLE_KEYS = (
+    "switch_below", "interpret", "block_rows", "block_cols", "sort_hyper"
+)
+
+#: What the streaming (map/reduce/scan/hist/search) kernels honour — all the
+#: common knobs except the sort network's hyper order.
+STREAM_TUNABLES = ("switch_below", "interpret", "block_rows", "block_cols")
 
 _COMMON_DEFAULTS = {
     "switch_below": 0,
     "interpret": None,
     "block_rows": None,
     "block_cols": None,
+    "sort_hyper": None,
 }
+
+#: Primitives built on the bitonic network: their block must stay a power of
+#: two (the network's wiring is the binary representation of the index), so
+#: block_rows gets the extra pow2 check on top of the sublane multiple.
+_SORT_FAMILY = (
+    "sort", "sort_kv", "argsort", "sort_batched", "argsort_batched", "topk"
+)
 
 
 def _validate_tuning(name: str, kv: dict, allowed=TUNABLE_KEYS) -> None:
@@ -85,9 +102,9 @@ def _validate_tuning(name: str, kv: dict, allowed=TUNABLE_KEYS) -> None:
                 f"valid keys: {TUNABLE_KEYS}"
             )
         if k not in allowed:
-            # e.g. block geometry for the bitonic sort (fixed SORT_* tiles)
-            # or any knob for bincount (no pallas impl): rejecting loudly
-            # beats a silent no-op the user believes took effect
+            # e.g. sort_hyper for a streaming kernel or any knob for
+            # bincount (no pallas impl): rejecting loudly beats a silent
+            # no-op the user believes took effect
             raise KeyError(
                 f"primitive {name!r} does not support tunable {k!r} "
                 f"(its kernels ignore it); supported: {tuple(allowed)}"
@@ -100,11 +117,29 @@ def _validate_tuning(name: str, kv: dict, allowed=TUNABLE_KEYS) -> None:
             raise ValueError(f"interpret must be True/False/None, got {v!r}")
         if k == "block_rows" and v is not None and (v <= 0 or v % KC.SUBLANES):
             raise ValueError(f"block_rows must be a multiple of {KC.SUBLANES}")
+        if (
+            k == "block_rows" and v is not None and name in _SORT_FAMILY
+            and v & (v - 1)
+        ):
+            raise ValueError(
+                f"{name!r} needs a power-of-two block_rows (bitonic network "
+                f"wiring), got {v!r}"
+            )
         if k == "block_cols" and v is not None and (
             v < KC.LANES or v & (v - 1) or v % KC.LANES
         ):
             raise ValueError(
                 f"block_cols must be a power-of-two multiple of {KC.LANES}"
+            )
+        if k == "sort_hyper" and not (
+            v is None or (isinstance(v, int) and not isinstance(v, bool)
+                          and 0 <= v <= 6)
+        ):
+            # 2^6 blocks × 8 Ki elements = 2 MiB f32 keys per grid step —
+            # past that the hyper-block stops fitting VMEM alongside values
+            # and double buffering
+            raise ValueError(
+                f"sort_hyper must be None or an int in [0, 6], got {v!r}"
             )
 
 
@@ -237,14 +272,22 @@ class Primitive:
         jnp_impl: Callable,
         pallas_impl: Callable | None = None,
         *,
-        tunables: tuple = TUNABLE_KEYS,
+        tunables: tuple = STREAM_TUNABLES,
         tuning_defaults: dict | None = None,
+        switch_measure: str = "size",
         doc: str = "",
         cache_size: int = 256,
     ):
         self.name = name
         self.jnp_impl = jnp_impl
         self.pallas_impl = pallas_impl
+        # what switch_below compares against: "size" (total elements) for
+        # 1-D primitives, "last_axis" for the batched sort family — there
+        # the per-ROW length decides whether the network beats the portable
+        # path (a (512, 8) router top-k is 4096 elements but 8-wide rows)
+        if switch_measure not in ("size", "last_axis"):
+            raise ValueError(f"bad switch_measure {switch_measure!r}")
+        self.switch_measure = switch_measure
         self.doc = doc
         # which table knobs this primitive's kernels actually honour —
         # the table rejects overrides outside this set
@@ -271,9 +314,12 @@ class Primitive:
             return resolved
         if self.pallas_impl is None:
             return "jnp"
-        n = operands[0].size if operands else 0
+        x = operands[0] if operands else None
+        n = x.size if x is not None else 0
+        if n and self.switch_measure == "last_axis" and x.ndim:
+            n = x.shape[-1]
         # AK's host-finish trade-off: tiny inputs skip the tiled kernel
-        # (and n == 0 always does — nothing to tile).
+        # (and empty ones always do — nothing to tile).
         if n == 0 or n < switch_below:
             return "jnp"
         return "pallas"
@@ -293,12 +339,14 @@ class Primitive:
         # whenever a geometry override is active.
         if resolved == "pallas":
             tune_key = (
-                tune["interpret"], tune["block_rows"], tune["block_cols"]
+                tune["interpret"], tune["block_rows"], tune["block_cols"],
+                tune["sort_hyper"],
             )
             scope = dict(
                 interpret=tune["interpret"],
                 block_rows=tune["block_rows"],
                 block_cols=tune["block_cols"],
+                sort_hyper=tune["sort_hyper"],
             )
         else:
             tune_key = None
@@ -495,9 +543,11 @@ accumulate_p = register(Primitive(
     doc="prefix scan (inclusive/exclusive), single pass",
 ))
 
-# The bitonic network uses its own fixed SORT_* tiling, so the sort family
-# honours switch_below/interpret but not the streaming block geometry.
-_SORT_TUNABLES = ("switch_below", "interpret")
+# The sort family honours the full knob set: block geometry re-tiles the
+# network (power-of-two blocks only — validated above) and ``sort_hyper``
+# picks how many cross stages each hyper-block launch fuses in VMEM
+# (kernels/sort_kernel.py; DESIGN.md §2a).
+_SORT_TUNABLES = TUNABLE_KEYS
 
 sort_p = register(Primitive(
     "sort",
@@ -525,6 +575,48 @@ argsort_p = register(Primitive(
     "argsort", kref.argsort_ref, _pallas_argsort,
     tunables=_SORT_TUNABLES,
     doc="stable index permutation (AK sortperm)",
+))
+
+
+def _jnp_sort_batched(x, *, descending=False):
+    s = jnp.sort(x, axis=-1)
+    return s[..., ::-1] if descending else s
+
+
+def _jnp_argsort_batched(x):
+    return jnp.argsort(x, axis=-1, stable=True).astype(jnp.int32)
+
+
+def _jnp_topk(x, *, k):
+    return jax.lax.top_k(x, k)
+
+
+def _pallas_topk(x, *, k):
+    # Sort-derived top-k with lax.top_k's exact tie order — see
+    # bitonic_topk_batched for why it avoids key negation (INT_MIN wraps).
+    return sort_kernel.bitonic_topk_batched(x, k)
+
+
+sort_batched_p = register(Primitive(
+    "sort_batched", _jnp_sort_batched,
+    lambda x, *, descending=False: sort_kernel.bitonic_sort_batched(
+        x, descending=descending
+    ),
+    tunables=_SORT_TUNABLES, switch_measure="last_axis",
+    doc="last-axis sort of (..., n) — the vmapped bitonic network",
+))
+
+argsort_batched_p = register(Primitive(
+    "argsort_batched", _jnp_argsort_batched,
+    sort_kernel.bitonic_argsort_batched,
+    tunables=_SORT_TUNABLES, switch_measure="last_axis",
+    doc="stable last-axis argsort of (..., n) (batched AK sortperm)",
+))
+
+topk_p = register(Primitive(
+    "topk", _jnp_topk, _pallas_topk,
+    tunables=_SORT_TUNABLES, switch_measure="last_axis",
+    doc="last-axis top-k values+indices, descending (sort-derived on TPU)",
 ))
 
 searchsorted_p = register(Primitive(

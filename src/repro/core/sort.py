@@ -21,6 +21,9 @@ from repro.core import registry
 _sort = registry.get("sort")
 _sort_kv = registry.get("sort_kv")
 _argsort = registry.get("argsort")
+_sort_batched = registry.get("sort_batched")
+_argsort_batched = registry.get("argsort_batched")
+_topk = registry.get("topk")
 
 
 def merge_sort(x, *, descending: bool = False, backend: str | None = None):
@@ -73,7 +76,29 @@ def sortperm_lowmem(x, *, backend: str | None = None):
     return (swide & (2**32 - 1)).astype(jnp.int32)
 
 
+def merge_sort_batched(x, *, descending: bool = False,
+                       backend: str | None = None):
+    """Sort (..., n) along its last axis — the batched AK ``merge_sort``.
+
+    MoE routing and the top-p sampler operate on per-row distributions; this
+    entry point runs the whole batch through one vmapped network (one launch
+    set, the batch as an extra grid dim) instead of round-tripping each row
+    through the 1-D primitive.
+    """
+    return _sort_batched(x, descending=descending, backend=backend)
+
+
+def sortperm_batched(x, *, backend: str | None = None):
+    """Stable index permutation along the last axis of (..., n)."""
+    return _argsort_batched(x, backend=backend)
+
+
 def topk(x, k: int, *, backend: str | None = None):
-    """Top-k values and indices along the last axis (descending)."""
-    del backend  # lax.top_k is already the right primitive on every backend
-    return jax.lax.top_k(x, k)
+    """Top-k values and indices along the last axis (descending).
+
+    Registered like every other primitive, so ``backend=`` is honoured:
+    the portable path is ``lax.top_k``; the pallas path derives it from the
+    batched bitonic network (descending stable order, first k), as AK would
+    compose it from the same sorting blocks.
+    """
+    return _topk(x, k=k, backend=backend)

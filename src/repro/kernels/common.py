@@ -45,6 +45,15 @@ def block_elems() -> int:
     return block_rows() * block_cols()
 
 
+def sort_hyper() -> int | None:
+    """Hyper-block order ``m`` for the fused bitonic cross-stage kernel
+    (sort_kernel.py): each cross launch maps ``2^m`` blocks per grid step and
+    runs ``m`` compare-exchange stages in VMEM. ``None`` = the kernel's
+    default; ``0`` = the unfused one-launch-per-stage layout (kept as the
+    benchmark's counted baseline)."""
+    return getattr(_tuning, "sort_hyper", None)
+
+
 def interpret_mode() -> bool:
     """Pallas kernels run in interpret mode everywhere except real TPUs
     (unless a tuning scope pins it explicitly)."""
@@ -55,7 +64,8 @@ def interpret_mode() -> bool:
 
 
 @contextlib.contextmanager
-def tuning_scope(*, interpret=None, block_rows=None, block_cols=None):
+def tuning_scope(*, interpret=None, block_rows=None, block_cols=None,
+                 sort_hyper=None):
     """Scoped kernel-tuning overrides, read at trace time by every kernel in
     this package. ``None`` keeps the current value. The registry wraps each
     kernel trace in this scope so the tuning table's knobs take effect
@@ -64,6 +74,7 @@ def tuning_scope(*, interpret=None, block_rows=None, block_cols=None):
         getattr(_tuning, "interpret", None),
         getattr(_tuning, "block_rows", None),
         getattr(_tuning, "block_cols", None),
+        getattr(_tuning, "sort_hyper", None),
     )
     if interpret is not None:
         _tuning.interpret = interpret
@@ -71,10 +82,13 @@ def tuning_scope(*, interpret=None, block_rows=None, block_cols=None):
         _tuning.block_rows = block_rows
     if block_cols is not None:
         _tuning.block_cols = block_cols
+    if sort_hyper is not None:
+        _tuning.sort_hyper = sort_hyper
     try:
         yield
     finally:
-        _tuning.interpret, _tuning.block_rows, _tuning.block_cols = prev
+        (_tuning.interpret, _tuning.block_rows, _tuning.block_cols,
+         _tuning.sort_hyper) = prev
 
 
 def ceil_div(a: int, b: int) -> int:

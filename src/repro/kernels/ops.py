@@ -53,6 +53,23 @@ def argsort(keys):
     return registry.call("argsort", keys, switch_below=0, backend="pallas")
 
 
+def sort_batched(keys, *, descending=False):
+    """Last-axis sort of (..., n) — the vmapped bitonic network."""
+    return registry.call("sort_batched", keys, descending=descending,
+                         switch_below=0, backend="pallas")
+
+
+def argsort_batched(keys):
+    """Stable last-axis argsort of (..., n)."""
+    return registry.call("argsort_batched", keys, switch_below=0,
+                         backend="pallas")
+
+
+def topk(x, k):
+    """Descending top-k (values, indices) along the last axis, sort-derived."""
+    return registry.call("topk", x, k=k, switch_below=0, backend="pallas")
+
+
 def searchsorted(hay, queries, *, side="left"):
     return registry.call("searchsorted", hay, queries, side=side,
                          switch_below=0, backend="pallas")

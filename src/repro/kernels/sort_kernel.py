@@ -12,18 +12,33 @@ hardware adaptation; the AK "merge" view survives inside the network — a
 bitonic merge of two sorted runs is exactly `concat(a, reverse(b))` followed
 by the final half-cleaner stages.)
 
-Three kernels:
-  * an in-block kernel applying any list of (k, j) compare-exchange stages
-    to each VMEM-resident block (j < BLOCK elements);
-  * a cross-block kernel applying one (k, j) stage with j >= BLOCK, pairing
-    blocks at distance j/BLOCK via BlockSpec index maps (the "grid is the
-    network wiring" trick — no data movement besides the two blocks);
-  * key/value variants of both, used by ``sortperm`` (values = iota) and
-    ``merge_sort_by_key``.
+Two kernels (DESIGN.md §2a records the fusion design):
+
+  * an **in-block** kernel applying any list of (k, j) compare-exchange
+    stages (j < BLOCK elements) to each VMEM-resident block;
+  * a **hyper-block** cross kernel: one launch covers a *window* of up to
+    ``m`` consecutive cross stages (j ≥ BLOCK).  Each grid step maps the
+    ``2^w`` blocks (w = window size) that those stages exchange — expressed
+    as ONE BlockSpec over a (Q, 2^w, S, R, L) view of the array, so the
+    strided block group arrives as a single ref — and runs the whole
+    member-butterfly in VMEM before writing back.  The window that reaches
+    block distance 1 additionally absorbs the k-phase's in-block finishing
+    stages, so a full k-phase beyond the block size costs
+    ``ceil(log2(k/BLOCK) / m)`` launches instead of ``log2(k/BLOCK) + 1``.
+    Outputs are written through the same index maps (every block is written
+    by exactly one grid step — no recombination pass) and
+    ``input_output_aliases`` makes the exchange in-place in HBM.
+
+Key/value variants of both kernels serve ``sortperm`` (values = iota) and
+``merge_sort_by_key``; ``bitonic_sort_batched`` / ``bitonic_argsort_batched``
+vmap the network over leading axes for last-axis sorts (MoE routing, top-p
+sampling) without 1-D round-trips.
 
 Direction bits come from broadcasted iotas over the *global* flat index —
 ``asc = ((i & k) == 0)`` — so every stage is oblivious (data-independent),
 which is also what makes the multi-device SIHSort composition deterministic.
+Block geometry (rows/cols) and the hyper-block order ``m`` are tuning-table
+knobs, read through ``common.block_rows()/block_cols()/sort_hyper()``.
 """
 from __future__ import annotations
 
@@ -35,12 +50,59 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import common as C
 
-# Block geometry: (8, 1024) = 8192 elements (a power of two, as the network
-# requires). f32 keys + i32 values + network temporaries ≈ a few hundred KiB
-# of VMEM — comfortable.
+# Default block geometry: (8, 1024) = 8192 elements (a power of two, as the
+# network requires). f32 keys + i32 values + network temporaries ≈ a few
+# hundred KiB of VMEM — comfortable. Overridable per sort-family primitive
+# via the registry tuning table (block_rows/block_cols, power-of-two only).
 SORT_ROWS = 8
 SORT_COLS = 1024
 SORT_BLOCK = SORT_ROWS * SORT_COLS
+
+# Default hyper-block order m: each cross launch fuses up to m stages over
+# 2^m blocks. m=3 → 8 blocks = 64 Ki f32 elements = 256 KiB keys (+ as much
+# again for values) resident per grid step — well inside VMEM with double
+# buffering. Tunable via the registry's ``sort_hyper`` knob; 0 selects the
+# unfused one-launch-per-stage layout (the benchmark's counted baseline).
+HYPER_ORDER = 3
+
+# Trace-time launch counter: incremented once per ``pl.pallas_call`` this
+# module issues, i.e. once per kernel launch of a single execution of the
+# traced program. ``benchmarks/sort_throughput.py`` reads it under
+# ``jax.eval_shape`` to *count* (not estimate) launches.
+_launches = 0
+
+
+def launch_count() -> int:
+    return _launches
+
+
+def reset_launch_count() -> None:
+    global _launches
+    _launches = 0
+
+
+def _pallas_call(*args, **kwargs):
+    global _launches
+    _launches += 1
+    return pl.pallas_call(*args, **kwargs)
+
+
+def _geometry() -> tuple[int, int, int]:
+    """Live (rows, cols, block) from the tuning scope; the network needs a
+    power-of-two block."""
+    rows, cols = C.block_rows(), C.block_cols()
+    block = rows * cols
+    if block & (block - 1):
+        raise ValueError(
+            f"bitonic sort needs a power-of-two block, got "
+            f"{rows}x{cols} = {block}"
+        )
+    return rows, cols, block
+
+
+def _hyper_order() -> int:
+    m = C.sort_hyper()
+    return HYPER_ORDER if m is None else m
 
 
 def _flat_iota(shape, mults):
@@ -122,10 +184,29 @@ def _cx(keys, vals, j, k, base, tie_break):
     return pairs_kv(keys, vals)
 
 
-def _inblock_body(stages, tie_break, has_vals, *refs):
-    """Apply ``stages`` = [(k, j), ...] (all j < SORT_BLOCK) to each block."""
+def _swap_blocks(ka, kb, va, vb, asc, tie_break):
+    """Whole-block compare-exchange: every lane of block ``a`` against the
+    same lane of block ``b``, direction ``asc`` (scalar — uniform across the
+    pair because all member-varying index bits sit strictly below k)."""
+    if va is None:
+        lo, hi = jnp.minimum(ka, kb), jnp.maximum(ka, kb)
+        return (jnp.where(asc, lo, hi), jnp.where(asc, hi, lo), None, None)
+    gt = ka > kb
+    if tie_break:
+        gt = gt | ((ka == kb) & (va > vb))
+    swap = jnp.where(asc, gt, ~gt)
+    return (
+        jnp.where(swap, kb, ka),
+        jnp.where(swap, ka, kb),
+        jnp.where(swap, vb, va),
+        jnp.where(swap, va, vb),
+    )
+
+
+def _inblock_body(stages, tie_break, has_vals, block, *refs):
+    """Apply ``stages`` = [(k, j), ...] (all j < block) to each block."""
     b = pl.program_id(0)
-    base = b * SORT_BLOCK
+    base = b * block
     if has_vals:
         k_ref, v_ref, ok_ref, ov_ref = refs
         keys, vals = k_ref[...], v_ref[...]
@@ -139,36 +220,62 @@ def _inblock_body(stages, tie_break, has_vals, *refs):
         ov_ref[...] = vals
 
 
-def _cross_body(k, j, tie_break, has_vals, *refs):
-    """One (k, j) stage with j a multiple of SORT_BLOCK: elementwise
-    compare-exchange between two whole blocks. Direction is constant across
-    the pair because all local bits sit below j < k."""
-    p = pl.program_id(0)
-    m = j // SORT_BLOCK
-    first = (p // m) * (2 * m) + (p % m)
-    asc = ((first * SORT_BLOCK) & k) == 0
+def _hyper_body(k, H, S, tail, tie_break, has_vals, block, *refs):
+    """Fused cross window: the ``H = 2^w`` member blocks of one exchange
+    group arrive as a single (1, H, 1, R, L) ref; run the w-stage member
+    butterfly (block distances S·2^(w-1) … S) entirely in VMEM, then the
+    optional in-block ``tail`` stages (only when S == 1, i.e. the window
+    bottomed out at adjacent blocks), then write every member back.
+
+    Direction is one scalar per grid step: members vary only block-index
+    bits [log2 S, log2 S + w), all strictly below bit log2(k/block), so the
+    whole group shares its k-bit.
+    """
+    q, r = pl.program_id(0), pl.program_id(1)
+    base_block = q * (H * S) + r
+    asc = ((base_block * block) & k) == 0
     if has_vals:
-        ak_r, av_r, bk_r, bv_r, oak, oav, obk, obv = refs
-        ak, av, bk, bv = ak_r[...], av_r[...], bk_r[...], bv_r[...]
-        gt = ak > bk
-        if tie_break:
-            gt = gt | ((ak == bk) & (av > bv))
-        swap = jnp.where(asc, gt, ~gt)
-        oak[...] = jnp.where(swap, bk, ak)
-        obk[...] = jnp.where(swap, ak, bk)
-        oav[...] = jnp.where(swap, bv, av)
-        obv[...] = jnp.where(swap, av, bv)
+        k_ref, v_ref, ok_ref, ov_ref = refs
+        vals = [v_ref[0, t, 0] for t in range(H)]
     else:
-        ak_r, bk_r, oak, obk = refs
-        ak, bk = ak_r[...], bk_r[...]
-        lo, hi = jnp.minimum(ak, bk), jnp.maximum(ak, bk)
-        oak[...] = jnp.where(asc, lo, hi)
-        obk[...] = jnp.where(asc, hi, lo)
+        k_ref, ok_ref = refs
+        vals = None
+    keys = [k_ref[0, t, 0] for t in range(H)]
+
+    s = H // 2
+    while s >= 1:
+        for t in range(H):
+            if t & s:
+                continue
+            u = t | s
+            ka, kb, va, vb = _swap_blocks(
+                keys[t], keys[u],
+                None if vals is None else vals[t],
+                None if vals is None else vals[u],
+                asc, tie_break,
+            )
+            keys[t], keys[u] = ka, kb
+            if vals is not None:
+                vals[t], vals[u] = va, vb
+        s //= 2
+
+    for (tk, tj) in tail:
+        for t in range(H):
+            base = (base_block + t * S) * block
+            nk, nv = _cx(keys[t], None if vals is None else vals[t],
+                         tj, tk, base, tie_break)
+            keys[t] = nk
+            if vals is not None:
+                vals[t] = nv
+
+    ok_ref[0, :, 0] = jnp.stack(keys)
+    if has_vals:
+        ov_ref[0, :, 0] = jnp.stack(vals)
 
 
-def _stages_upto_block(k):
-    """All in-block j stages for a given k: j = min(k//2, BLOCK//2) .. 1."""
-    j = min(k // 2, SORT_BLOCK // 2)
+def _stages_upto_block(k, block):
+    """All in-block j stages for a given k: j = min(k//2, block//2) .. 1."""
+    j = min(k // 2, block // 2)
     out = []
     while j >= 1:
         out.append((k, j))
@@ -176,94 +283,74 @@ def _stages_upto_block(k):
     return out
 
 
-def _block_spec():
-    return pl.BlockSpec((SORT_ROWS, SORT_COLS), lambda i: (i, 0))
-
-
-def _pair_specs(m):
-    first = lambda p: (p // m) * (2 * m) + (p % m)
-    a = pl.BlockSpec((SORT_ROWS, SORT_COLS), lambda p: (first(p), 0))
-    b = pl.BlockSpec((SORT_ROWS, SORT_COLS), lambda p: (first(p) + m, 0))
-    return a, b
-
-
-def _run_inblock(stages, keys2d, vals2d, tie_break, n_blocks):
+def _run_inblock(stages, keys2d, vals2d, tie_break, n_blocks, rows, cols):
     has_vals = vals2d is not None
-    specs = [_block_spec()] * (2 if has_vals else 1)
+    spec = pl.BlockSpec((rows, cols), lambda i: (i, 0))
+    specs = [spec] * (2 if has_vals else 1)
     outs = (
         [jax.ShapeDtypeStruct(keys2d.shape, keys2d.dtype)]
-        + ([jax.ShapeDtypeStruct(vals2d.shape, vals2d.dtype)] if has_vals else [])
+        + ([jax.ShapeDtypeStruct(vals2d.shape, vals2d.dtype)] if has_vals
+           else [])
     )
-    res = pl.pallas_call(
-        functools.partial(_inblock_body, stages, tie_break, has_vals),
+    res = _pallas_call(
+        functools.partial(_inblock_body, stages, tie_break, has_vals,
+                          rows * cols),
         grid=(n_blocks,),
         in_specs=specs,
         out_specs=specs if has_vals else specs[0],
         out_shape=outs if has_vals else outs[0],
+        input_output_aliases={i: i for i in range(len(specs))},
         interpret=C.interpret_mode(),
     )(*([keys2d, vals2d] if has_vals else [keys2d]))
     return res if has_vals else (res, None)
 
 
-def _run_cross(k, j, keys2d, vals2d, tie_break, n_blocks):
+def _run_hyper(k, window, tail, keys2d, vals2d, tie_break, n_blocks,
+               rows, cols):
+    """One fused cross launch for ``window`` = consecutive halving block
+    distances [d, d/2, …, S]. The (n_blocks·rows, cols) arrays are viewed as
+    (Q, H, S, rows, cols) — a pure reshape: block g = q·(H·S) + t·S + r maps
+    to [q, t, r] — so one BlockSpec hands each grid step (q, r) its whole
+    exchange group and writes it back through the same map. Every block is
+    written exactly once across the grid; aliasing makes it in-place."""
+    H = 1 << len(window)
+    S = window[-1]
+    assert all(a == 2 * b for a, b in zip(window, window[1:])), window
+    Q = n_blocks // (H * S)
+    block = rows * cols
     has_vals = vals2d is not None
-    m = j // SORT_BLOCK
-    sa, sb = _pair_specs(m)
-    if has_vals:
-        in_specs = [sa, sa, sb, sb]
-        out_specs = [sa, sa, sb, sb]
-        out_shape = [
-            jax.ShapeDtypeStruct(keys2d.shape, keys2d.dtype),
-            jax.ShapeDtypeStruct(vals2d.shape, vals2d.dtype),
-        ] * 2
-        args = [keys2d, vals2d, keys2d, vals2d]
-    else:
-        in_specs = [sa, sb]
-        out_specs = [sa, sb]
-        out_shape = [jax.ShapeDtypeStruct(keys2d.shape, keys2d.dtype)] * 2
-        args = [keys2d, keys2d]
-    res = pl.pallas_call(
-        functools.partial(_cross_body, k, j, tie_break, has_vals),
-        grid=(n_blocks // 2,),
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
+
+    def view(a):
+        return a.reshape(Q, H, S, rows, cols)
+
+    spec = pl.BlockSpec((1, H, 1, rows, cols), lambda q, r: (q, 0, r, 0, 0))
+    ins = [view(keys2d)] + ([view(vals2d)] if has_vals else [])
+    outs = [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in ins]
+    res = _pallas_call(
+        functools.partial(_hyper_body, k, H, S, tail, tie_break, has_vals,
+                          block),
+        grid=(Q, S),
+        in_specs=[spec] * len(ins),
+        out_specs=[spec] * len(ins) if has_vals else spec,
+        out_shape=outs if has_vals else outs[0],
+        input_output_aliases={i: i for i in range(len(ins))},
         interpret=C.interpret_mode(),
-    )(*args)
+    )(*ins)
     if has_vals:
-        ka, va, kb, vb = res
-        # ka and kb each hold updated halves written through disjoint block
-        # maps of the SAME logical array; merge by recombining: both outputs
-        # cover the full array but only their mapped blocks are meaningful.
-        keys = _merge_pair_halves(ka, kb, m)
-        vals = _merge_pair_halves(va, vb, m)
-        return keys, vals
-    ka, kb = res
-    return _merge_pair_halves(ka, kb, m), None
+        k5, v5 = res
+        return k5.reshape(keys2d.shape), v5.reshape(vals2d.shape)
+    return res.reshape(keys2d.shape), None
 
 
-def _merge_pair_halves(a, b, m):
-    """Outputs of the cross kernel: ``a`` holds the updated 'first' blocks,
-    ``b`` the 'second' blocks; non-mapped blocks are untouched padding.
-    Recombine by selecting per block: block index g is a 'first' iff
-    (g // m) is even."""
-    rows = a.shape[0]
-    n_blocks = rows // SORT_ROWS
-    g = jnp.arange(n_blocks) // m
-    is_first = (g % 2) == 0
-    sel = jnp.repeat(is_first, SORT_ROWS)[:, None]
-    return jnp.where(sel, a, b)
-
-
-def _prepare(keys, vals, pad_key):
+def _prepare(keys, vals, pad_key, block, cols):
     n = keys.shape[0]
-    total = max(C.next_pow2(n), SORT_BLOCK)
+    total = max(C.next_pow2(n), block)
     keys_p = C.pad_to(keys, total, pad_key)
-    view_k = keys_p.reshape(-1, SORT_COLS)
+    view_k = keys_p.reshape(-1, cols)
     view_v = None
     if vals is not None:
         pad_v = C.type_max(vals.dtype)
-        view_v = C.pad_to(vals, total, pad_v).reshape(-1, SORT_COLS)
+        view_v = C.pad_to(vals, total, pad_v).reshape(-1, cols)
     return view_k, view_v, total
 
 
@@ -272,10 +359,11 @@ def bitonic_sort(keys: jax.Array, *, descending: bool = False) -> jax.Array:
     n = keys.shape[0]
     if n == 0:
         return keys
+    rows, cols, block = _geometry()
     pad = C.type_max(keys.dtype)
-    k2d, _, total = _prepare(keys, None, pad)
-    n_blocks = total // SORT_BLOCK
-    k2d, _ = _sort_network(k2d, None, total, n_blocks, tie_break=False)
+    k2d, _, total = _prepare(keys, None, pad, block, cols)
+    k2d, _ = _sort_network(k2d, None, total, tie_break=False,
+                           rows=rows, cols=cols)
     out = k2d.reshape(-1)[:n]
     return out[::-1] if descending else out
 
@@ -288,39 +376,136 @@ def bitonic_sort_kv(
     n = keys.shape[0]
     if n == 0:
         return keys, vals
+    rows, cols, block = _geometry()
     pad = C.type_max(keys.dtype)
-    k2d, v2d, total = _prepare(keys, vals, pad)
-    n_blocks = total // SORT_BLOCK
-    k2d, v2d = _sort_network(k2d, v2d, total, n_blocks, tie_break=tie_break)
+    k2d, v2d, total = _prepare(keys, vals, pad, block, cols)
+    k2d, v2d = _sort_network(k2d, v2d, total, tie_break=tie_break,
+                             rows=rows, cols=cols)
     return k2d.reshape(-1)[:n], v2d.reshape(-1)[:n]
 
 
-def _sort_network(k2d, v2d, total, n_blocks, tie_break):
-    # Phase 1: every stage with k <= SORT_BLOCK is in-block for all blocks
-    # (the block base b*SORT_BLOCK contributes nothing to (i & k)).
+def bitonic_sort_batched(
+    keys: jax.Array, *, descending: bool = False
+) -> jax.Array:
+    """Sort along the last axis of (..., n): the 1-D network vmapped over
+    the flattened leading axes (the batching rule turns the vmap into an
+    extra grid dimension — one launch set for the whole batch, no per-row
+    1-D round-trips)."""
+    if keys.ndim <= 1:
+        return bitonic_sort(keys, descending=descending)
+    lead = keys.shape[:-1]
+    flat = keys.reshape(-1, keys.shape[-1])
+    out = jax.vmap(
+        functools.partial(bitonic_sort, descending=descending)
+    )(flat)
+    return out.reshape(*lead, keys.shape[-1])
+
+
+def bitonic_argsort_batched(keys: jax.Array) -> jax.Array:
+    """Stable argsort along the last axis of (..., n) — the kv network with
+    an iota payload and index tie-break, vmapped over leading axes."""
+    n = keys.shape[-1]
+
+    def one(row):
+        idx = jnp.arange(n, dtype=jnp.int32)
+        _, perm = bitonic_sort_kv(row, idx, tie_break=True)
+        return perm
+
+    if keys.ndim <= 1:
+        return one(keys)
+    lead = keys.shape[:-1]
+    out = jax.vmap(one)(keys.reshape(-1, n))
+    return out.reshape(*lead, n)
+
+
+def bitonic_topk_batched(
+    keys: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Descending top-k (values, indices) along the last axis, with
+    ``lax.top_k``'s (value desc, index asc) tie order.
+
+    No key negation (which would wrap INT_MIN): sort ascending with a
+    REVERSED-iota payload (n-1-i) and index tie-break, then read the run
+    backwards — (key asc, n-1-i asc) reversed is (key desc, i asc).
+    """
+    n = keys.shape[-1]
+
+    def one(row):
+        rev = jnp.arange(n - 1, -1, -1, dtype=jnp.int32)
+        _, pay = bitonic_sort_kv(row, rev, tie_break=True)
+        return (n - 1) - pay[::-1][:k]
+
+    if keys.ndim <= 1:
+        order = one(keys)
+    else:
+        order = jax.vmap(one)(keys.reshape(-1, n)).reshape(
+            *keys.shape[:-1], k
+        )
+    return jnp.take_along_axis(keys, order, axis=-1), order
+
+
+def _sort_network(k2d, v2d, total, tie_break, *, rows, cols):
+    block = rows * cols
+    n_blocks = total // block
+    hyper = _hyper_order()
+    # Phase 1: every stage with k <= block is in-block for all blocks
+    # (the block base b*block contributes nothing to (i & k)).
     stages = []
     k = 2
-    while k <= min(total, SORT_BLOCK):
-        stages.extend(_stages_upto_block(k))
+    while k <= min(total, block):
+        stages.extend(_stages_upto_block(k, block))
         k *= 2
-    k2d, v2d = _run_inblock(stages, k2d, v2d, tie_break, n_blocks)
-    # Phase 2: k > SORT_BLOCK — cross-block j stages then one in-block finish.
+    k2d, v2d = _run_inblock(stages, k2d, v2d, tie_break, n_blocks,
+                            rows, cols)
+    # Phase 2: k > block — cross stages at block distances k/(2·block) … 1,
+    # then the in-block finish. Fused: windows of up to ``hyper`` stages per
+    # launch, the last window absorbing the finish. hyper == 0 keeps the
+    # one-launch-per-stage + separate-finish layout (counted baseline).
     while k <= total:
-        j = k // 2
-        while j >= SORT_BLOCK:
-            k2d, v2d = _run_cross(k, j, k2d, v2d, tie_break, n_blocks)
-            j //= 2
-        k2d, v2d = _run_inblock(_stages_upto_block_finish(k), k2d, v2d,
-                                tie_break, n_blocks)
+        dists = []
+        d = k // (2 * block)
+        while d >= 1:
+            dists.append(d)
+            d //= 2
+        if hyper <= 0:
+            for d in dists:
+                k2d, v2d = _run_hyper(k, [d], [], k2d, v2d, tie_break,
+                                      n_blocks, rows, cols)
+            k2d, v2d = _run_inblock(_stages_upto_block(k, block), k2d,
+                                    v2d, tie_break, n_blocks, rows, cols)
+        else:
+            idx = 0
+            while idx < len(dists):
+                w = min(hyper, len(dists) - idx)
+                window = dists[idx:idx + w]
+                idx += w
+                # for k > block, _stages_upto_block is exactly the
+                # j = block/2 .. 1 finishing ladder
+                tail = (_stages_upto_block(k, block)
+                        if idx == len(dists) else [])
+                k2d, v2d = _run_hyper(k, window, tail, k2d, v2d, tie_break,
+                                      n_blocks, rows, cols)
         k *= 2
     return k2d, v2d
 
 
-def _stages_upto_block_finish(k):
-    """In-block finishing stages for k > SORT_BLOCK: j = BLOCK/2 .. 1."""
-    out = []
-    j = SORT_BLOCK // 2
-    while j >= 1:
-        out.append((k, j))
-        j //= 2
-    return out
+def cross_launches(n: int, *, hyper: int | None = None,
+                   block: int | None = None) -> int:
+    """Closed-form launch count of the network for an n-element sort —
+    kept next to the network so the benchmark's *counted* numbers can be
+    cross-checked against the model (and the DESIGN.md formula)."""
+    if block is None:
+        _, _, block = _geometry()
+    if hyper is None:
+        hyper = _hyper_order()
+    total = max(C.next_pow2(n), block)
+    launches = 1  # phase-1 in-block
+    k = 2 * block
+    while k <= total:
+        i = (k // block).bit_length() - 1  # cross stages this phase
+        if hyper <= 0:
+            launches += i + 1
+        else:
+            launches += -(-i // hyper)
+        k *= 2
+    return launches

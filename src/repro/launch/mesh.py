@@ -13,21 +13,17 @@ from __future__ import annotations
 
 import jax
 
+from repro.core import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU smokes)."""
     n = len(jax.devices())
     data = min(data, n // model) or 1
-    return jax.make_mesh(
-        (data, model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat.make_mesh((data, model), ("data", "model"))

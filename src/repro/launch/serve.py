@@ -4,7 +4,7 @@ The sampler is deliberately built from the paper's primitives — this is the
 "sorting is the hot path of real applications" claim made executable:
 
     top-k cut       -> ak.topk                     (sort-derived)
-    top-p (nucleus) -> ak.sortperm descending
+    top-p (nucleus) -> ak.sortperm_batched descending over the whole batch
                        + ak.accumulate (inclusive prefix sum)
                        + ak.searchsortedfirst      (cut index)
 
@@ -33,7 +33,8 @@ from repro.models import model as M
 # the rest: every primitive here traces once for the whole serve loop
 # instead of once per decode step.
 SAMPLER_TUNING = {
-    "argsort": {"switch_below": 4096},
+    "argsort_batched": {"switch_below": 4096},
+    "topk": {"switch_below": 4096},
     "accumulate": {"switch_below": 4096},
     "searchsorted": {"switch_below": 4096},
 }
@@ -55,18 +56,27 @@ def sample_logits(rng, logits, *, temperature=1.0, top_k=0, top_p=1.0,
         lg = jnp.where(lg < kth[:, None], -jnp.inf, lg)
 
     if top_p < 1.0:
-        def one(row):
-            order = ak.sortperm(-row)            # descending — AK sortperm
-            probs = jax.nn.softmax(row[order])
+        # descending order for the WHOLE batch in one batched sortperm —
+        # the network's vmap batching rule makes the batch a grid dim
+        # instead of round-tripping each row through the 1-D primitive
+        order = ak.sortperm_batched(-lg)
+        probs = jax.nn.softmax(
+            jnp.take_along_axis(lg, order, axis=-1), axis=-1
+        )
+
+        def cut_row(crow):
             # host-scalar init keeps one registry cache key (a device
-            # scalar would route to the uncached path)
-            cum = ak.accumulate(jnp.add, probs, init=0.0)
-            # first index where cumulative mass exceeds top_p — AK search
-            cut = ak.searchsortedfirst(cum, jnp.float32(top_p)[None])[0]
-            keep_sorted = jnp.arange(row.shape[0]) <= cut
-            keep = jnp.zeros_like(keep_sorted).at[order].set(keep_sorted)
-            return jnp.where(keep, row, -jnp.inf)
-        lg = jax.vmap(one)(lg)
+            # scalar would route to the uncached path); first index where
+            # cumulative mass exceeds top_p — AK scan + search
+            cum = ak.accumulate(jnp.add, crow, init=0.0)
+            return ak.searchsortedfirst(cum, jnp.float32(top_p)[None])[0]
+
+        cut = jax.vmap(cut_row)(probs)
+        keep_sorted = jnp.arange(V)[None, :] <= cut[:, None]
+        keep = jnp.zeros_like(keep_sorted).at[
+            jnp.arange(B)[:, None], order
+        ].set(keep_sorted)
+        lg = jnp.where(keep, lg, -jnp.inf)
 
     return jax.random.categorical(rng, lg).astype(jnp.int32)
 

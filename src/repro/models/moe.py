@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import core as ak
+from repro.core import compat
 from repro.core import registry
 from repro.models import layers as L
 from repro.models import sharding as SH
@@ -44,6 +45,10 @@ from repro.models import sharding as SH
 ROUTING_TUNING = {
     "argsort": {"switch_below": 2048},
     "accumulate": {"switch_below": 2048},
+    # router top-k over (T, E): switch_below compares the per-ROW length E
+    # (registry switch_measure="last_axis") — expert counts are far below
+    # any cut-off where the sort-derived path beats lax.top_k
+    "topk": {"switch_below": 2048},
 }
 
 
@@ -77,7 +82,8 @@ def _route(p, cfg, x_flat):
     global estimators agree exactly."""
     logits = (x_flat.astype(jnp.float32)) @ p["router"]  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
-    gate_vals, ids = ak.topk(probs, cfg.top_k)  # paper primitive: topk
+    with registry.tuning.overrides(ROUTING_TUNING):
+        gate_vals, ids = ak.topk(probs, cfg.top_k)  # paper primitive: topk
     gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
     T = x_flat.shape[0]
     occupancy = ak.bincount(ids.reshape(-1), cfg.n_experts).astype(
@@ -239,7 +245,7 @@ def moe_ffn_ep(
             out = out + L.swiglu(pl_["shared"], xf)
         return out.reshape(Bl, Sl, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(p_specs, x_spec),

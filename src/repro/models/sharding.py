@@ -238,8 +238,11 @@ def finish_tp(h):
     if mesh is None:
         return h
     dp = dp_axes_of(mesh)
+    # rank-generic: (B, S, d) from attention/FFN, but also (T, d) token
+    # slabs (the MoE shared-expert path) — batch-ish leading axis sharded,
+    # everything else replicated
     return jax.lax.with_sharding_constraint(
-        h, NamedSharding(mesh, P(dp, None, None))
+        h, NamedSharding(mesh, P(dp, *([None] * (h.ndim - 1))))
     )
 
 

@@ -17,6 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
+
 
 def quantize_int8(x, *, residual=None):
     """Per-tensor symmetric int8 quantization with optional error feedback.
@@ -47,7 +49,7 @@ def compressed_psum(x, axis_name, *, residual=None):
     unstable: the largest-scale rank systematically under-applies and its
     residual diverges — measured before this form was adopted.)
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     xf = x.astype(jnp.float32)
     if residual is not None:
         xf = xf + residual

@@ -15,9 +15,9 @@ def test_sihsort_exact_and_balanced(multidevice):
     multidevice("""
 import numpy as np, jax, jax.numpy as jnp
 from repro import core as ak
+from repro.core import compat
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 for dist in ["normal", "uniform", "bimodal", "ints"]:
     n = 8 * 4096
@@ -44,9 +44,9 @@ def test_sihsort_payload_integrity(multidevice):
     multidevice("""
 import numpy as np, jax, jax.numpy as jnp
 from repro import core as ak
+from repro.core import compat
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 rng = np.random.default_rng(1)
 n = 8 * 2048
 keys = rng.normal(size=n).astype(np.float32)
@@ -71,9 +71,9 @@ def test_sihsort_local_sorter_composability(multidevice):
     multidevice("""
 import numpy as np, jax, jax.numpy as jnp
 from repro import core as ak
+from repro.core import compat
 
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((4,), ("data",))
 rng = np.random.default_rng(2)
 x = rng.normal(size=4 * 8192).astype(np.float32)
 
@@ -93,9 +93,9 @@ def test_shuffle_by_sort_is_permutation(multidevice):
     multidevice("""
 import numpy as np, jax, jax.numpy as jnp
 from repro.data import global_shuffle_by_sort
+from repro.core import compat
 
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((4,), ("data",))
 ids = jnp.arange(4 * 1024, dtype=jnp.int32)
 shuffled, counts = global_shuffle_by_sort(ids, mesh, "data", seed=3)
 vals = np.asarray(shuffled).reshape(4, -1)
@@ -105,3 +105,70 @@ assert sorted(got.tolist()) == list(range(4 * 1024))   # a permutation
 assert not np.array_equal(got, np.arange(4 * 1024))     # actually shuffled
 print("OK")
 """, ndev=4)
+
+
+def test_sihsort_overflow_accounting_skewed(multidevice):
+    """capacity_factor=1.0 on a heavy-tailed distribution (no splitter
+    refinement, so the interpolated splitters are badly wrong) MUST drop
+    elements: overflow is reported non-zero, every shard's valid prefix is
+    still sorted, and conservation holds — kept + dropped == n."""
+    multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from repro import core as ak
+from repro.core import compat
+
+mesh = compat.make_mesh((8,), ("data",))
+rng = np.random.default_rng(7)
+n = 8 * 4096
+x = rng.lognormal(mean=0.0, sigma=2.0, size=n).astype(np.float32)
+res = ak.sihsort_sharded(jnp.asarray(x), mesh, "data",
+                         capacity_factor=1.0, refine_rounds=0)
+ovf = int(np.asarray(res.overflow).sum())
+assert ovf > 0, "skewed data at capacity 1.0 must overflow"
+counts = np.asarray(res.count).reshape(-1)
+assert int(counts.sum()) + ovf == n  # nothing silently lost
+vals = np.asarray(res.values).reshape(8, -1)
+kept = []
+for r in range(8):
+    v = vals[r, :counts[r]]
+    assert np.all(np.diff(v) >= 0), f"shard {r} prefix not sorted"
+    kept.append(v)
+# kept elements are a sub-multiset of the input, still globally ordered
+flat = np.concatenate(kept)
+assert np.all(np.diff(flat) >= 0)
+print("OK")
+""")
+
+
+def test_sihsort_overflow_payload_path(multidevice):
+    """Same capacity squeeze on the key-value path: every surviving
+    (key, payload) pair must still be intact — payloads index the original
+    array and reproduce the kept keys exactly."""
+    multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from repro import core as ak
+from repro.core import compat
+
+mesh = compat.make_mesh((8,), ("data",))
+rng = np.random.default_rng(8)
+n = 8 * 2048
+keys = rng.lognormal(mean=0.0, sigma=2.0, size=n).astype(np.float32)
+payload = np.arange(n, dtype=np.int32)
+res = ak.sihsort_sharded(jnp.asarray(keys), mesh, "data",
+                         payload=jnp.asarray(payload),
+                         capacity_factor=1.0, refine_rounds=0)
+ovf = int(np.asarray(res.overflow).sum())
+assert ovf > 0
+vals = np.asarray(res.values).reshape(8, -1)
+pays = np.asarray(res.payload).reshape(8, -1)
+counts = np.asarray(res.count).reshape(-1)
+assert int(counts.sum()) + ovf == n
+got_k = np.concatenate([vals[r, :counts[r]] for r in range(8)])
+got_p = np.concatenate([pays[r, :counts[r]] for r in range(8)])
+assert np.all(np.diff(got_k) >= 0)
+# pair integrity for every survivor
+np.testing.assert_allclose(keys[got_p], got_k, rtol=0, atol=0)
+# no payload appears twice
+assert len(np.unique(got_p)) == got_p.shape[0]
+print("OK")
+""")

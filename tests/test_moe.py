@@ -105,11 +105,11 @@ import dataclasses
 import numpy as np, jax, jax.numpy as jnp
 from repro.configs import load_smoke_config
 from repro.models import moe as MOE
+from repro.core import compat
 
 cfg = dataclasses.replace(load_smoke_config("granite_moe_1b"),
                           dtype=jnp.float32)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 p = MOE.moe_init(jax.random.PRNGKey(0), cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
                       jnp.float32)

@@ -252,10 +252,17 @@ def test_tuning_validation():
         registry.tuning.set("map", switch_below=-1)
     with pytest.raises(ValueError):
         registry.tuning.set("map", interpret="false")  # bool('false') trap
+    # the sort family's tiles are tunable now (hyper-block fusion PR), but
+    # only power-of-two blocks wire a bitonic network
+    registry.tuning.set("sort", block_rows=16, sort_hyper=2)
+    registry.tuning.reset("sort")
+    with pytest.raises(ValueError):
+        registry.tuning.set("sort", block_rows=24)  # 8-multiple, not pow2
+    with pytest.raises(ValueError):
+        registry.tuning.set("sort", sort_hyper=7)  # past the VMEM budget
     with pytest.raises(KeyError):
-        # the bitonic network has fixed tiles; geometry knobs must not
-        # silently no-op
-        registry.tuning.set("sort", block_rows=16)
+        # streaming kernels have no hyper order; must not silently no-op
+        registry.tuning.set("map", sort_hyper=2)
     with pytest.raises(KeyError):
         registry.tuning.set("bincount", switch_below=8)  # no pallas impl
 
@@ -275,3 +282,34 @@ def test_stats_query_shapes():
     assert all_stats["sort"]["calls"] == 1
     registry.reset_stats()
     assert registry.stats("sort")["calls"] == 0
+
+
+def test_batched_switch_below_compares_row_length():
+    # the batched sort family (switch_measure="last_axis") demotes on the
+    # per-ROW length, not the total batch size: a (512, 8) router top-k is
+    # 4096 elements but its 8-wide rows must take lax.top_k
+    x = jnp.zeros((512, 8), jnp.float32)
+    with registry.tuning.overrides(topk={"switch_below": 2048}):
+        ak.topk(x, 2, backend="pallas")
+    assert registry.get("topk").cache_backends() == ("jnp",)
+    # rows clearing the cut-off keep the pallas path
+    y = jnp.zeros((2, 4096), jnp.float32)
+    with registry.tuning.overrides(
+        topk={"switch_below": 2048, "block_rows": 8, "block_cols": 128}
+    ):
+        ak.topk(y, 2, backend="pallas")
+    assert "pallas" in registry.get("topk").cache_backends()
+
+
+def test_pallas_topk_matches_lax_top_k_incl_int_min():
+    # INT_MIN would wrap under key negation; the reversed-payload trick
+    # must keep both backends in exact agreement (values AND tie order)
+    lo = np.iinfo(np.int32).min
+    x = jnp.asarray(np.array([[5, 2, lo, 5, lo, 7]], np.int32))
+    with registry.tuning.overrides(
+        topk={"block_rows": 8, "block_cols": 128}
+    ):
+        v, i = ak.topk(x, 4, backend="pallas")
+    wv, wi = jax.lax.top_k(x, 4)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(wi))

@@ -1,0 +1,153 @@
+"""Hyper-block fused bitonic network vs np.sort — boundary sweep.
+
+The fusion rewrite (kernels/sort_kernel.py, DESIGN.md §2a) changes which
+stages land in which launch, so every fusion boundary gets a size on each
+side of it: sub-block, exactly one block, one hyper-block ± one block, and
+non-power-of-two paddings — under a shrunk (8, 128) = 1 Ki-element block so
+the cross-stage machinery engages at test-sized inputs (and the geometry
+knobs themselves are exercised). Dtypes f32 / i32 / bf16; key-only and
+key-value with index tie-break; hyper orders 0 (unfused baseline), 1, 3.
+
+Interpret-mode sorts run eagerly at seconds per case, so the matrix is
+factored rather than crossed: the hyper orders sweep the boundary sizes at
+f32, the other dtypes pin the awkward sizes at the default order.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import common as KC
+from repro.kernels import sort_kernel as SK
+
+# shrunk block: B = 8·128 = 1024 elements; default hyper m=3 → hyper-block
+# = 8 blocks = 8192 elements
+ROWS, COLS = 8, 128
+BLOCK = ROWS * COLS
+
+# every fusion boundary: < B, = B, hyper-block ∓ 1 block (7·B / 9·B, the
+# latter padding to 16·B), non-power-of-two n (padding path)
+BOUNDARY_SIZES = [100, BLOCK, 7 * BLOCK, 9 * BLOCK]
+HYPERS = [0, 1, 3]
+
+
+def _scope(hyper=None):
+    return KC.tuning_scope(block_rows=ROWS, block_cols=COLS,
+                           sort_hyper=hyper)
+
+
+def _data(rng, n, dtype):
+    if dtype == jnp.int32:
+        # narrow range → plenty of duplicate keys
+        return jnp.asarray(rng.integers(-500, 500, size=n).astype(np.int32))
+    x = rng.normal(size=n).astype(np.float32)
+    if dtype == jnp.bfloat16:
+        # round-trip so the numpy oracle sees exactly the bf16 values
+        return jnp.asarray(x).astype(jnp.bfloat16)
+    return jnp.asarray(x)
+
+
+def _np_keys(x):
+    """numpy view of the keys (bf16 upcast to f32 — order-preserving)."""
+    if x.dtype == jnp.bfloat16:
+        return np.asarray(x.astype(jnp.float32))
+    return np.asarray(x)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("n", BOUNDARY_SIZES)
+@pytest.mark.parametrize("hyper", HYPERS)
+def test_hyper_orders_agree_with_np(rng, n, hyper):
+    x = _data(rng, n, jnp.float32)
+    with _scope(hyper):
+        got = SK.bitonic_sort(x)
+    np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
+
+
+@pytest.mark.parametrize("n", [1, 5, BLOCK - 1, BLOCK + 1, 3000])
+def test_padding_edges_f32(rng, n):
+    x = _data(rng, n, jnp.float32)
+    with _scope():
+        got = SK.bitonic_sort(x)
+    np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [BLOCK + 1, 7 * BLOCK])
+def test_other_dtypes_at_default_order(rng, n, dtype):
+    x = _data(rng, n, dtype)
+    with _scope():
+        got = SK.bitonic_sort(x)
+    np.testing.assert_array_equal(_np_keys(got), np.sort(_np_keys(x)))
+
+
+@pytest.mark.parametrize("n", [100, 7 * BLOCK, 9 * BLOCK])
+@pytest.mark.parametrize("hyper", [0, 3])
+def test_fused_kv_tie_break_is_stable_argsort(rng, n, hyper):
+    # duplicate-heavy keys: the tie-break must reproduce np's stable argsort
+    x = jnp.asarray(rng.integers(0, 7, size=n).astype(np.int32))
+    idx = jnp.arange(n, dtype=jnp.int32)
+    with _scope(hyper):
+        sk, sv = SK.bitonic_sort_kv(x, idx, tie_break=True)
+    np.testing.assert_array_equal(np.asarray(sk), np.sort(np.asarray(x)))
+    np.testing.assert_array_equal(
+        np.asarray(sv), np.argsort(np.asarray(x), kind="stable")
+    )
+
+
+@pytest.mark.parametrize("n", [BLOCK, 9 * BLOCK])
+def test_fused_kv_payload_rides_keys(rng, n):
+    # payload ≠ iota: every (key, value) pair must survive the exchange
+    k = _data(rng, n, jnp.float32)
+    v = jnp.asarray(rng.integers(0, 10**6, size=n).astype(np.int32))
+    with _scope():
+        sk, sv = SK.bitonic_sort_kv(k, v)
+    order = np.argsort(np.asarray(k), kind="stable")
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(k)[order])
+    # pairs intact: sorting the (key, val) tuples both ways agrees
+    got = sorted(zip(np.asarray(sk).tolist(), np.asarray(sv).tolist()))
+    want = sorted(zip(np.asarray(k).tolist(), np.asarray(v).tolist()))
+    assert got == want
+
+
+@pytest.mark.parametrize("hyper", HYPERS)
+def test_launch_count_matches_closed_form(hyper):
+    import jax
+
+    n = 16 * BLOCK
+    x = jax.ShapeDtypeStruct((n,), jnp.float32)
+    with _scope(hyper):
+        SK.reset_launch_count()
+        jax.eval_shape(lambda a: SK.bitonic_sort(a), x)
+        counted = SK.launch_count()
+        assert counted == SK.cross_launches(n, hyper=hyper)
+    with _scope():
+        # the PR's core claim, counted: fusion at least halves launches
+        assert 2 * SK.cross_launches(n, hyper=3) <= SK.cross_launches(
+            n, hyper=0
+        )
+
+
+def test_batched_sort_and_argsort(rng):
+    xb = jnp.asarray(rng.normal(size=(5, 700)).astype(np.float32))
+    with _scope():
+        got = SK.bitonic_sort_batched(xb)
+        perm = SK.bitonic_argsort_batched(xb)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.sort(np.asarray(xb), axis=-1)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(perm), np.argsort(np.asarray(xb), axis=-1, kind="stable")
+    )
+
+
+def test_descending_and_3d_batch(rng):
+    x = jnp.asarray(rng.normal(size=(2, 3, 300)).astype(np.float32))
+    with _scope():
+        got = SK.bitonic_sort_batched(x, descending=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.sort(np.asarray(x), axis=-1)[..., ::-1]
+    )

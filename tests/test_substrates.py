@@ -80,9 +80,9 @@ def test_compressed_psum_matches_mean(multidevice):
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.optim import compressed_psum
+from repro.core import compat
 
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((4,), ("data",))
 rng = np.random.default_rng(0)
 g = jnp.asarray(rng.normal(size=(4, 1024)).astype(np.float32))
 
@@ -90,7 +90,7 @@ def f(gl):
     out, resid = compressed_psum(gl[0], "data")
     return out[None], resid[None]
 
-out, resid = jax.shard_map(f, mesh=mesh, in_specs=(P("data", None),),
+out, resid = compat.shard_map(f, mesh=mesh, in_specs=(P("data", None),),
                            out_specs=(P("data", None), P("data", None)))(g)
 want = np.asarray(g).mean(axis=0)
 got = np.asarray(out)[0]
@@ -103,7 +103,7 @@ resid = jnp.zeros_like(g)
 def f2(gl, rl):
     out, r = compressed_psum(gl[0], "data", residual=rl[0])
     return out[None], r[None]
-f2s = jax.shard_map(f2, mesh=mesh,
+f2s = compat.shard_map(f2, mesh=mesh,
                     in_specs=(P("data", None), P("data", None)),
                     out_specs=(P("data", None), P("data", None)))
 for _ in range(rounds):
