@@ -42,6 +42,66 @@ def t_accel(n_bytes, link):
     return local + exchange
 
 
+def sihsort_cost(n_bytes, nranks=8, *, link=ICI, exchange="all_to_all",
+                 collectives=1):
+    """Per-rank modelled time breakdown of one SIHSort call on the current
+    (merge-finish) pipeline: local sort + exchange + k-way merge finish.
+
+    The finish is ⌈log₂ P⌉ pairwise merge levels at 2 HBM passes each —
+    against the seed's full re-sort this is the log P vs log² n work gap
+    that `benchmarks/sort_throughput.run_distributed` counts in launches.
+
+    ``exchange="all_to_all"``: ``collectives`` rounds of latency (1 after
+    the fused-exchange rewrite; the seed paid 3) + the wire time of the
+    cross-rank fraction (P-1)/P of the buffer.
+
+    ``exchange="ring"``: P-1 chunked ppermute hops. Hop s+1's transfer has
+    no data dependency on merging hop s's chunk, so they overlap: the
+    pipeline costs one exposed hop of comm at the head, one merge at the
+    tail, and max(comm, merge) in between — vs their sum when serialised.
+    The incremental merges pass over the whole accumulator each hop, so
+    ring trades merge-compute for hidden wire time: it wins only when the
+    link (not HBM) is the bottleneck, i.e. exactly the paper's staged/
+    through-host regime.
+    """
+    local = SORT_PASSES * n_bytes / HBM
+    merge_levels = max(int(np.ceil(np.log2(max(nranks, 2)))), 1)
+    wire = n_bytes * (nranks - 1) / nranks / link
+    if exchange == "all_to_all":
+        t_comm = wire + collectives * LAUNCH
+        t_merge = 2 * merge_levels * n_bytes / HBM
+        t_total = local + t_comm + t_merge
+        overlap_saved = 0.0
+    elif exchange == "ring":
+        hops = max(nranks - 1, 1)
+        hop_comm = wire / hops + LAUNCH
+        hop_merge = 2 * n_bytes / HBM
+        serial = hops * (hop_comm + hop_merge)
+        t_comm = hop_comm + max(hops - 1, 0) * max(hop_comm, hop_merge)
+        t_merge = hop_merge
+        overlap_saved = serial - (t_comm + t_merge)
+        t_total = local + t_comm + t_merge
+    else:
+        raise ValueError(f"unknown exchange {exchange!r}")
+    return {
+        "t_local_s": local,
+        "t_comm_s": t_comm,
+        "t_merge_s": t_merge,
+        "t_total_s": t_total,
+        "overlap_saved_s": overlap_saved,
+        "wire_bytes": n_bytes * (nranks - 1) / nranks,
+    }
+
+
+def direct_vs_staged(n_bytes, nranks=8, *, exchange="all_to_all"):
+    """Speedup of a direct interconnect over through-host staging for one
+    sihsort exchange — the repo's mirror of the paper's 4.93× GPUDirect
+    figure (there: economic viability of accelerator sorting)."""
+    t_ici = sihsort_cost(n_bytes, nranks, link=ICI, exchange=exchange)
+    t_host = sihsort_cost(n_bytes, nranks, link=HOST, exchange=exchange)
+    return t_host["t_total_s"] / t_ici["t_total_s"], t_ici, t_host
+
+
 def t_cpu(n_bytes):
     local = 2 * n_bytes / CPU_SORT_RATE
     exchange = n_bytes / CPU_RAM
@@ -70,6 +130,27 @@ def run(sizes=None):
         t_cpu(1e6 * 4) * 1e6,
         "reference at 1e6 elems",
     ))
+    # sihsort exchange economics: fused single collective, direct vs staged
+    nb = 1e6 * 4
+    speedup, t_ici, t_host = direct_vs_staged(nb, nranks=8)
+    rows.append((
+        "sihsort_cost.direct_vs_staged",
+        t_ici["t_total_s"] * 1e6,
+        f"staged/direct={speedup:.2f}x (paper: 4.93x GPUDirect)",
+    ))
+    ring = sihsort_cost(nb, 8, link=HOST, exchange="ring")
+    a2a = sihsort_cost(nb, 8, link=HOST, exchange="all_to_all")
+    rows.append((
+        "sihsort_cost.ring_overlap.host",
+        ring["t_total_s"] * 1e6,
+        f"overlap_saved={ring['overlap_saved_s'] * 1e6:.1f}us "
+        f"vs_all_to_all={a2a['t_total_s'] * 1e6:.1f}us",
+    ))
+    # a slow link is where hiding wire time behind merge compute pays:
+    # the overlapped ring must beat serialising its own hops
+    assert ring["overlap_saved_s"] > 0
+    # direct interconnects must decisively beat through-host staging
+    assert speedup > 2.0
     # paper's qualitative claim: ICI crosses over, host-staged doesn't (or
     # crosses far later)
     assert cross["ici"] is not None

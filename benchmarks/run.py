@@ -65,6 +65,9 @@ def main(argv=None) -> None:
         # smaller n keeps CI wall-time sane; the gate ratio is asserted at
         # every size, the checked-in BENCH_sort.json records the full 2^20
         _emit(sort_throughput.run(n=2**17, repeats=1, json_path=None))
+        # distributed gates are trace-only (counted collectives/launches,
+        # no execution), so the full n=2^20, P=8 geometry stays cheap
+        _emit(sort_throughput.run_distributed(json_path=None))
         return
 
     from benchmarks import arithmetic, cost, scaling, throughput
@@ -72,6 +75,7 @@ def main(argv=None) -> None:
     _emit(arithmetic.run(n=1_000_000))
     _emit(dispatch_overhead.run())
     _emit(sort_throughput.run())
+    _emit(sort_throughput.run_distributed())
     _emit(scaling.run("weak", n_per_rank=32_768, devcounts=(1, 2, 4, 8)))
     _emit(scaling.run("strong", total=262_144, devcounts=(1, 2, 4, 8)))
     _emit(throughput.run(devcounts=(4,), sizes=(16_384, 65_536)))

@@ -20,6 +20,8 @@ from repro.core.ops import (
     reduce,
 )
 from repro.core.sort import (
+    merge,
+    merge_kv,
     merge_sort,
     merge_sort_batched,
     merge_sort_by_key,
@@ -33,6 +35,7 @@ from repro.core.histogram import bincount, minmax_histogram
 from repro.core.distributed import (
     ShardedSort,
     collect_sorted,
+    count_collectives,
     sihsort,
     sihsort_sharded,
 )
@@ -42,9 +45,11 @@ __all__ = [
     "registry", "tuning",
     "accumulate", "all_pred", "any_pred", "foreachindex", "map_elements",
     "mapreduce", "reduce",
+    "merge", "merge_kv",
     "merge_sort", "merge_sort_batched", "merge_sort_by_key", "sortperm",
     "sortperm_batched", "sortperm_lowmem", "topk",
     "searchsortedfirst", "searchsortedlast",
     "bincount", "minmax_histogram",
-    "ShardedSort", "collect_sorted", "sihsort", "sihsort_sharded",
+    "ShardedSort", "collect_sorted", "count_collectives", "sihsort",
+    "sihsort_sharded",
 ]

@@ -39,6 +39,18 @@ def axis_size(axis_name) -> int:
     return _core.get_axis_env().axis_size(axis_name)
 
 
+def jaxpr_types() -> tuple:
+    """(Jaxpr, ClosedJaxpr) classes across the jax.core → jax.extend.core
+    move: newer releases delete them from ``jax.core``, older ones don't
+    have ``jax.extend.core`` yet. Used by the collective counter's jaxpr
+    walk (``core.distributed.count_collectives``)."""
+    try:
+        from jax.extend.core import ClosedJaxpr, Jaxpr
+    except ImportError:
+        from jax.core import ClosedJaxpr, Jaxpr
+    return Jaxpr, ClosedJaxpr
+
+
 def make_mesh(shape, axis_names):
     """``jax.make_mesh`` with explicit Auto axis types where the release
     supports them (newer jax defaults every axis to Auto anyway)."""

@@ -12,11 +12,15 @@ mesh devices along a named axis, inside ``jax.shard_map``:
                          static shapes; the capacity-factor idiom is the
                          standard TPU replacement — same as MoE dispatch)
 
-Paper trick kept: *minimise collective rounds by fusing payloads* ("counters
-hidden at the end of integer arrays"). Here: min and max ship in ONE pmax
-(negated-min packing); the histogram psum carries the global element count
-for free (its own sum). Total pre-exchange rounds: 2 collectives — matching
-MPISort's "least amount of MPI communication" design goal.
+Paper trick kept everywhere: *minimise collective rounds by fusing
+payloads* ("counters hidden at the end of integer arrays"). Min and max
+ship in ONE pmax (negated-min packing); the histogram psum carries the
+global element count for free (its own sum); and the exchange itself ships
+values, optional payload, AND per-rank counts in ONE ``all_to_all`` — every
+operand bitcast into a common int32 word carrier, the count hidden as the
+last word of each destination row. Total collective rounds: 2 pre-exchange
++ 1 exchange — matching MPISort's "least amount of MPI communication"
+design goal (the seed paid 3 separate all_to_alls here).
 
 Algorithm per rank (all inside one traced program):
   1. local sort;
@@ -26,13 +30,22 @@ Algorithm per rank (all inside one traced program):
      rank r receives elements in (s_{r-1}, s_r];
   4. partition the sorted shard by ``searchsortedlast`` (the paper notes
      exactly this "upper bound" dependency that API-models are missing);
-  5. capacity-padded all_to_all of (values [, payload], counts);
-  6. final local sort of the received runs.
+  5. ONE fused capacity-padded exchange of (values [, payload], counts) —
+     either a single dense ``all_to_all`` (default) or, opt-in
+     (``exchange="ring"``), nranks-1 chunked ``ppermute`` hops whose
+     per-chunk transfer overlaps with the incremental merge of the
+     previous chunk (the comm/compute overlap is modelled in
+     ``benchmarks/cost.py``);
+  6. finish by **k-way merging** the nranks received runs — each is a
+     contiguous window of a sender's sorted shard, so only the bitonic
+     network's O(n log P) merge phases run (``core.sort.merge`` /
+     ``merge_kv``), not the seed's full O(n log² n) re-sort of the
+     capacity buffer.
 
 Outputs are padded-ragged: (sorted values (nranks*cap,), valid count).
 Elements above capacity are dropped and counted in ``overflow`` (exact mode:
-``capacity_factor=float(nranks)`` makes cap = n_local, which can never
-overflow).
+``capacity_factor=float(nranks)`` makes cap = n_local, which provably never
+overflows — the accounting is skipped outright).
 """
 from __future__ import annotations
 
@@ -48,10 +61,10 @@ from repro.core import search as S
 from repro.core import sort as SRT
 from repro.kernels import common as KC
 
-# Default registry tuning for the rank-local sorts (steps 1 and 6). Shards
-# at serve scale are tens of Ki elements — worth the fused hyper-block
-# network — but the tail re-sort of a lightly-filled capacity buffer can be
-# tiny, where kernel-launch latency loses to the portable path (AK's
+# Default registry tuning for the rank-local sort (step 1) and merge
+# finish (step 6). Shards at serve scale are tens of Ki elements — worth
+# the fused hyper-block network — but a lightly-filled capacity buffer can
+# be tiny, where kernel-launch latency loses to the portable path (AK's
 # switch_below). sort_hyper is left at the kernel default (fused). Callers
 # retune via ``sihsort(..., ak_tuning={...})`` (``{}`` = no profile, outer
 # scopes/globals apply untouched) — the profile must not silently shadow a
@@ -59,7 +72,82 @@ from repro.kernels import common as KC
 SIHSORT_TUNING = {
     "sort": {"switch_below": 4096},
     "sort_kv": {"switch_below": 4096},
+    "merge": {"switch_below": 4096},
+    "merge_kv": {"switch_below": 4096},
 }
+
+
+# ---------------------------------------------------------------------------
+# Fused-exchange word packing: every exchanged operand (values, optional
+# payload, per-rank counts) bitcast into one int32 word carrier so the whole
+# exchange is ONE collective — the paper's "counters hidden at the end of
+# integer arrays" trick applied to the all_to_all itself, not just pmax.
+# ---------------------------------------------------------------------------
+
+def exchange_capacity(n_local: int, nranks: int, capacity_factor: float,
+                      dtypes=()) -> int:
+    """Per-destination slot count of the fused exchange — THE one place the
+    capacity rule lives (``benchmarks/sort_throughput``'s gate derives its
+    buffer from here too, so counted launches always describe the buffer
+    sihsort actually exchanges). 16-bit operands round capacity to even:
+    they pack two lanes per int32 carrier word."""
+    cap = max(int(KC.ceil_div(int(n_local * capacity_factor), nranks)), 1)
+    if any(jnp.dtype(dt).itemsize == 2 for dt in dtypes):
+        cap += cap % 2
+    return cap
+
+
+def _words_per_row(dtype, m: int) -> int:
+    """int32 words for m elements of ``dtype`` (16-bit dtypes pack in
+    pairs — callers keep m even for them)."""
+    size = jnp.dtype(dtype).itemsize
+    if size == 2:
+        return m // 2
+    return m * (size // 4)
+
+
+def _to_words(a: jax.Array) -> jax.Array:
+    """Bitcast a (rows, m) array of a 2/4/8-byte dtype to int32 words."""
+    dt = jnp.dtype(a.dtype)
+    if dt == jnp.int32:
+        return a
+    rows, m = a.shape
+    if dt.itemsize == 4:
+        return jax.lax.bitcast_convert_type(a, jnp.int32)
+    if dt.itemsize == 2:
+        return jax.lax.bitcast_convert_type(
+            a.reshape(rows, m // 2, 2), jnp.int32
+        )
+    if dt.itemsize == 8:
+        return jax.lax.bitcast_convert_type(a, jnp.int32).reshape(rows, -1)
+    raise NotImplementedError(f"unsupported exchange dtype {dt}")
+
+
+def _from_words(w: jax.Array, dtype, m: int) -> jax.Array:
+    """Inverse of ``_to_words``: (rows, words) int32 -> (rows, m)."""
+    dt = jnp.dtype(dtype)
+    rows = w.shape[0]
+    if dt == jnp.int32:
+        return w
+    if dt.itemsize == 4:
+        return jax.lax.bitcast_convert_type(w, dt)
+    if dt.itemsize == 2:
+        return jax.lax.bitcast_convert_type(w, dt).reshape(rows, m)
+    if dt.itemsize == 8:
+        return jax.lax.bitcast_convert_type(w.reshape(rows, m, 2), dt)
+    raise NotImplementedError(f"unsupported exchange dtype {dt}")
+
+
+def _split_rows(recv: jax.Array, value_dt, payload_dt, cap: int):
+    """Unpack fused exchange rows: (values, payload | None, counts)."""
+    vw = _words_per_row(value_dt, cap)
+    vals = _from_words(recv[:, :vw], value_dt, cap)
+    off, pay = vw, None
+    if payload_dt is not None:
+        pw = _words_per_row(payload_dt, cap)
+        pay = _from_words(recv[:, off:off + pw], payload_dt, cap)
+        off += pw
+    return vals, pay, recv[:, off]
 
 
 class ShardedSort(NamedTuple):
@@ -122,13 +210,23 @@ def sihsort(
     local_sort: Callable | None = None,
     backend: str | None = None,
     ak_tuning: dict | None = None,
+    exchange: str = "all_to_all",
 ) -> ShardedSort:
     """Distributed sort of the global array sharded as ``x`` along
     ``axis_name``. Must be called inside ``shard_map``. See module docs.
 
     ``ak_tuning``: per-primitive registry overrides for the rank-local
     sorts ({primitive: {tunable: value}}); defaults to SIHSORT_TUNING,
-    pass ``{}`` to defer entirely to ambient scopes/globals."""
+    pass ``{}`` to defer entirely to ambient scopes/globals.
+
+    ``exchange``: ``"all_to_all"`` (default — ONE fused dense collective)
+    or ``"ring"`` (nranks-1 chunked ``ppermute`` hops; each hop's transfer
+    overlaps the incremental merge of the previously received chunk —
+    see ``benchmarks/cost.py`` for the overlap model)."""
+    if exchange not in ("all_to_all", "ring"):
+        raise ValueError(
+            f"exchange must be 'all_to_all' or 'ring', got {exchange!r}"
+        )
     nranks = compat.axis_size(axis_name)
     n_local = x.shape[0]
     local_tuning = SIHSORT_TUNING if ak_tuning is None else ak_tuning
@@ -174,38 +272,98 @@ def sihsort(
     )
     counts = offsets[1:] - offsets[:-1]  # (nranks,)
 
-    # -- 5. capacity-padded exchange ---------------------------------------
-    cap = int(KC.ceil_div(int(n_local * capacity_factor), nranks))
-    cap = max(cap, 1)
+    # -- 5. ONE fused capacity-padded exchange -----------------------------
+    cap = exchange_capacity(
+        n_local, nranks, capacity_factor,
+        dtypes=[a.dtype for a in ((x,) if payload is None else (x, payload))],
+    )
     pad = KC.type_max(x.dtype)
     col = jnp.arange(cap, dtype=jnp.int32)[None, :]
     idx = offsets[:-1, None] + col
     valid = col < counts[:, None]
-    sent = jnp.minimum(counts, cap)
-    overflow = jnp.sum(counts - sent)
+    if capacity_factor == float(nranks):
+        # exact mode: cap == n_local and the destination counts sum to
+        # n_local, so no single destination can exceed cap — overflow is
+        # provably zero; skip the accounting instead of computing it
+        sent = counts
+        overflow = jnp.zeros((), jnp.int32)
+    else:
+        sent = jnp.minimum(counts, cap)
+        overflow = jnp.sum(counts - sent)
     take = jnp.clip(idx, 0, max(n_local - 1, 0))
     send = jnp.where(valid, xs[take], pad)                      # (nranks, cap)
-    recv = jax.lax.all_to_all(send, axis_name, 0, 0, tiled=True)
-    recv_counts = jax.lax.all_to_all(
-        sent.reshape(nranks, 1), axis_name, 0, 0, tiled=True
-    ).reshape(nranks)
-
+    # values [+ payload] + the per-destination count hidden as the last
+    # carrier word of each row: ONE collective ships everything
+    parts = [_to_words(send)]
     if ps is not None:
-        send_p = jnp.where(valid, ps[take], jnp.zeros((), ps.dtype))
-        recv_p = jax.lax.all_to_all(send_p, axis_name, 0, 0, tiled=True)
+        send_p = jnp.where(valid, ps[take], KC.type_max(ps.dtype))
+        parts.append(_to_words(send_p))
+    parts.append(sent.astype(jnp.int32).reshape(nranks, 1))
+    fused = jnp.concatenate(parts, axis=1)
+    pay_dt = None if ps is None else ps.dtype
 
-    # -- 6. final local sort of received runs -------------------------------
-    flat = recv.reshape(-1)
-    # re-pad: entries past each sender's count are already type-max
+    if exchange == "all_to_all":
+        recv = jax.lax.all_to_all(fused, axis_name, 0, 0, tiled=True)
+        recv_v, recv_p, recv_counts = _split_rows(recv, x.dtype, pay_dt, cap)
+
+        # -- 6. k-way merge of the nranks received runs --------------------
+        # Each run is a contiguous window of a sender's sorted shard:
+        # pre-sorted, sentinel-padded past its count. Only the network's
+        # merge phases run — not the seed's full re-sort of the buffer.
+        with registry.tuning.overrides(local_tuning):
+            if ps is None:
+                out = SRT.merge(recv_v.reshape(-1), nranks,
+                                counts=recv_counts, backend=backend)
+                out_p = None
+            else:
+                out, out_p = SRT.merge_kv(
+                    recv_v.reshape(-1), recv_p.reshape(-1), nranks,
+                    counts=recv_counts, backend=backend,
+                )
+        n_valid = jnp.sum(recv_counts).astype(jnp.int32)
+        return ShardedSort(out, out_p, n_valid, overflow.astype(jnp.int32))
+
+    # -- 5'/6'. chunked ring exchange with incremental merging -------------
+    # Hop s ships each rank's chunk for rank (r+s) mod P one neighbourhood
+    # over; the merge of hop s's chunk has no data dependency on hop s+1's
+    # ppermute, so the scheduler can overlap transfer with merge compute
+    # (the paper's economic argument for direct interconnects — modelled in
+    # benchmarks/cost.py::sihsort_cost).
+    r_idx = jax.lax.axis_index(axis_name)
+    n_out = nranks * cap
+    pad_p = None if ps is None else KC.type_max(ps.dtype)
+
+    def unpack_row(row):
+        v, p, c = _split_rows(row[None, :], x.dtype, pay_dt, cap)
+        return (v.reshape(-1), None if p is None else p.reshape(-1),
+                c.reshape(()))
+
+    own_v, own_p, own_c = unpack_row(jnp.take(fused, r_idx, axis=0))
+    acc_v = KC.pad_to(own_v, n_out, pad)
+    acc_p = None if ps is None else KC.pad_to(own_p, n_out, pad_p)
+    n_valid = own_c.astype(jnp.int32)
     with registry.tuning.overrides(local_tuning):
-        if ps is None:
-            out = SRT.merge_sort(flat, backend=backend)
-            out_p = None
-        else:
-            out, out_p = SRT.merge_sort_by_key(flat, recv_p.reshape(-1),
-                                               backend=backend)
-    n_valid = jnp.sum(recv_counts).astype(jnp.int32)
-    return ShardedSort(out, out_p, n_valid, overflow.astype(jnp.int32))
+        for s in range(1, nranks):
+            src = jnp.take(fused, (r_idx + s) % nranks, axis=0)
+            chunk = jax.lax.ppermute(
+                src, axis_name,
+                perm=[(i, (i + s) % nranks) for i in range(nranks)],
+            )
+            ch_v, ch_p, ch_c = unpack_row(chunk)
+            # two sorted runs of n_out: accumulator + sentinel-padded chunk.
+            # All real elements fit the n_out prefix (total valid <= n_out),
+            # so the slice drops only sentinels.
+            cat_v = jnp.concatenate([acc_v, KC.pad_to(ch_v, n_out, pad)])
+            if ps is None:
+                acc_v = SRT.merge(cat_v, 2, backend=backend)[:n_out]
+            else:
+                cat_p = jnp.concatenate(
+                    [acc_p, KC.pad_to(ch_p, n_out, pad_p)]
+                )
+                mv, mp = SRT.merge_kv(cat_v, cat_p, 2, backend=backend)
+                acc_v, acc_p = mv[:n_out], mp[:n_out]
+            n_valid = n_valid + ch_c.astype(jnp.int32)
+    return ShardedSort(acc_v, acc_p, n_valid, overflow.astype(jnp.int32))
 
 
 def sihsort_sharded(
@@ -248,6 +406,50 @@ def sihsort_sharded(
         run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )(*args)
+
+
+#: Collective primitives the counter recognises (jaxpr primitive names).
+COLLECTIVE_PRIMS = (
+    "all_to_all", "ppermute", "psum", "pmax", "pmin", "all_gather",
+    "reduce_scatter",
+)
+
+
+def count_collectives(fn: Callable, *args) -> dict:
+    """Per-execution collective counts of ``fn(*args)`` by jaxpr
+    inspection — counted, not estimated, like the kernel-launch counter.
+
+    Walks every sub-jaxpr (shard_map bodies, pallas kernels, control flow)
+    and tallies ``COLLECTIVE_PRIMS`` occurrences. Each jaxpr equation runs
+    once per execution here (no collectives under loops), so static counts
+    equal runtime rounds. ``args`` may be arrays or ShapeDtypeStructs.
+    Tests pin the paper's minimal-communication claim with this: ONE
+    all_to_all per sihsort call, pre-exchange pmax+psum rounds exactly 2
+    (+ refine_rounds psums)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    out: dict[str, int] = {}
+    jaxpr_cls, closed_cls = compat.jaxpr_types()
+
+    def subjaxprs(v):
+        if isinstance(v, closed_cls):
+            yield v.jaxpr
+        elif isinstance(v, jaxpr_cls):
+            yield v
+        elif isinstance(v, (list, tuple)):
+            for u in v:
+                yield from subjaxprs(u)
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if name in COLLECTIVE_PRIMS:
+                out[name] = out.get(name, 0) + 1
+            for v in eqn.params.values():
+                for sub in subjaxprs(v):
+                    walk(sub)
+
+    walk(closed.jaxpr)
+    return out
 
 
 def collect_sorted(result: ShardedSort) -> jax.Array:

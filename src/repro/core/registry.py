@@ -54,7 +54,7 @@ import numpy as np
 from repro.core import dispatch
 from repro.kernels import common as KC
 from repro.kernels import hist_kernel, map_kernel, reduce_kernel, scan_kernel
-from repro.kernels import search_kernel, sort_kernel
+from repro.kernels import merge_kernel, search_kernel, sort_kernel
 from repro.kernels import ref as kref
 
 
@@ -90,7 +90,8 @@ _COMMON_DEFAULTS = {
 #: two (the network's wiring is the binary representation of the index), so
 #: block_rows gets the extra pow2 check on top of the sublane multiple.
 _SORT_FAMILY = (
-    "sort", "sort_kv", "argsort", "sort_batched", "argsort_batched", "topk"
+    "sort", "sort_kv", "argsort", "sort_batched", "argsort_batched", "topk",
+    "merge", "merge_kv",
 )
 
 
@@ -617,6 +618,42 @@ topk_p = register(Primitive(
     "topk", _jnp_topk, _pallas_topk,
     tunables=_SORT_TUNABLES, switch_measure="last_axis",
     doc="last-axis top-k values+indices, descending (sort-derived on TPU)",
+))
+
+
+def _jnp_merge(x, counts=None, *, nruns):
+    # oracle = concatenate+sort: the runs are already concatenated, so
+    # (count-masked) full sort — O(n log² n), which is exactly what the
+    # pallas merge path exists to beat.
+    return jnp.sort(merge_kernel.mask_run_tails(x, counts, nruns))
+
+
+def _pallas_merge(x, counts=None, *, nruns):
+    return merge_kernel.kway_merge(x, nruns, counts=counts)
+
+
+def _jnp_merge_kv(k, v, counts=None, *, nruns, tie_break=False):
+    k = merge_kernel.mask_run_tails(k, counts, nruns)
+    v = merge_kernel.mask_run_tails(v, counts, nruns,
+                                    fill=KC.type_max(v.dtype))
+    return kref.sort_kv_ref(k, v, tie_break=tie_break)
+
+
+def _pallas_merge_kv(k, v, counts=None, *, nruns, tie_break=False):
+    return merge_kernel.kway_merge_kv(k, v, nruns, counts=counts,
+                                      tie_break=tie_break)
+
+
+merge_p = register(Primitive(
+    "merge", _jnp_merge, _pallas_merge,
+    tunables=_SORT_TUNABLES,
+    doc="k-way merge of nruns pre-sorted runs (bitonic merge phases only)",
+))
+
+merge_kv_p = register(Primitive(
+    "merge_kv", _jnp_merge_kv, _pallas_merge_kv,
+    tunables=_SORT_TUNABLES,
+    doc="key/value k-way merge of nruns pre-sorted runs",
 ))
 
 searchsorted_p = register(Primitive(

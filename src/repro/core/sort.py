@@ -20,6 +20,8 @@ from repro.core import registry
 
 _sort = registry.get("sort")
 _sort_kv = registry.get("sort_kv")
+_merge = registry.get("merge")
+_merge_kv = registry.get("merge_kv")
 _argsort = registry.get("argsort")
 _sort_batched = registry.get("sort_batched")
 _argsort_batched = registry.get("argsort_batched")
@@ -91,6 +93,39 @@ def merge_sort_batched(x, *, descending: bool = False,
 def sortperm_batched(x, *, backend: str | None = None):
     """Stable index permutation along the last axis of (..., n)."""
     return _argsort_batched(x, backend=backend)
+
+
+def merge(x, nruns: int, *, counts=None, backend: str | None = None):
+    """Merge ``nruns`` consecutive pre-sorted ascending runs of 1-D ``x``
+    into one sorted array of the same length.
+
+    ``counts`` (optional, (nruns,) ints, traced) marks each run's valid
+    prefix; slots past it are masked to type-max and sort to the global
+    tail, so the merged valid prefix is ``sum(counts)`` long.  The portable
+    oracle is a full (concatenate+)sort; the pallas path runs only the
+    bitonic network's merge phases — O(n log P) cross launches instead of
+    the full O(n log² n) rebuild (kernels/merge_kernel.py, DESIGN.md §2b).
+    This is SIHSort's finish stage over the P runs the exchange delivers.
+    """
+    if counts is None:
+        return _merge(x, nruns=nruns, backend=backend)
+    return _merge(x, counts, nruns=nruns, backend=backend)
+
+
+def merge_kv(keys, vals, nruns: int, *, counts=None,
+             tie_break: bool = False, backend: str | None = None):
+    """Key/value k-way merge of pre-sorted runs; pairs survive intact.
+
+    ``tie_break=True`` additionally requires each run to be
+    (key, value)-lexicographically sorted and yields the stable
+    lexicographic merge; otherwise equal-key pair order is unspecified,
+    as in ``merge_sort_by_key``.
+    """
+    if counts is None:
+        return _merge_kv(keys, vals, nruns=nruns, tie_break=tie_break,
+                         backend=backend)
+    return _merge_kv(keys, vals, counts, nruns=nruns, tie_break=tie_break,
+                     backend=backend)
 
 
 def topk(x, k: int, *, backend: str | None = None):

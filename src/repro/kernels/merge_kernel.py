@@ -1,0 +1,164 @@
+"""Pallas k-way merge of P pre-sorted runs — the bitonic network's tail.
+
+``core/distributed.py``'s exchange hands every rank P = nranks runs that are
+each already sorted (a contiguous window of a sender's sorted shard, padded
+to capacity with type-max sentinels).  The seed finished by re-sorting the
+whole received buffer from scratch: the full O(n log² n) network, paying the
+log²-depth *build* phases for order the data already has.  Merging the runs
+only needs the network's **merge phases**: a bitonic merge of two sorted
+L-runs is one k = 2L phase (log₂ 2L compare-exchange stages), and log₂ P
+pairwise levels finish the whole buffer — O(n · log P · log n) work against
+O(n · log² n), and, what decides throughput, ``⌈log₂(k/B)/m⌉`` fused cross
+launches per level instead of the full ladder (see DESIGN.md §2b).
+
+Implementation: the standard network's phase-k invariant is that aligned
+k/2-runs alternate ascending/descending by global index.  All-ascending
+input runs are one elementwise pass away from that invariant — reverse the
+odd runs — after which phases ``k = 2L, 4L, …, T`` of the *unmodified*
+fused network (``sort_kernel._sort_network(first_k=2L)``) are exactly the
+k-way merge: the same (run, block) BlockSpec views, VMEM-resident member
+butterflies, and ``input_output_aliases`` in-place writes as the full sort.
+The reversal is fused by XLA with the count-masking pass below — one HBM
+round-trip total before the merge launches.
+
+Count-aware padding: runs are capacity buffers with a valid prefix
+``counts[r]``; slots past the count are masked to the type-max sentinel in
+the same pre-pass.  Sentinels are *constant* runs — sorted in both
+directions — so they satisfy every phase invariant for free: padding (to a
+power-of-two run length, to a power-of-two run count, to the block floor)
+never adds merge levels beyond ⌈log₂ P⌉ of real data and never forces a
+compaction pass.
+
+``tie_break=True`` (key-value form) additionally requires each input run to
+be sorted (key, value)-lexicographically; the merged output is then the
+stable lexicographic merge.  With ``tie_break=False`` equal-key pair order
+is unspecified, as in ``sort_kernel``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common as C
+from repro.kernels import sort_kernel as SK
+
+
+def mask_run_tails(x: jax.Array, counts, nruns: int,
+                   fill=None) -> jax.Array:
+    """Mask slots past each run's valid count to ``fill`` (type-max by
+    default).  ``x`` is (nruns · run_len,), ``counts`` is (nruns,) ints.
+    Shared by the Pallas path and the jnp oracle so both see identical
+    sentinel tails (a deterministic, comparable padded region)."""
+    if counts is None:
+        return x
+    n = x.shape[0]
+    run_len = n // nruns
+    fill = C.type_max(x.dtype) if fill is None else fill
+    col = jnp.arange(run_len, dtype=jnp.int32)[None, :]
+    valid = col < jnp.asarray(counts, jnp.int32).reshape(nruns, 1)
+    return jnp.where(valid, x.reshape(nruns, run_len), fill).reshape(n)
+
+
+def _reverse_odd_runs(flat: jax.Array, run_len: int) -> jax.Array:
+    """Reverse every odd-indexed run, establishing the network's
+    alternating-direction phase invariant (ascending ⟺ even run index)."""
+    v = flat.reshape(-1, run_len)
+    odd = (jnp.arange(v.shape[0], dtype=jnp.int32) % 2 == 1)[:, None]
+    return jnp.where(odd, v[:, ::-1], v).reshape(flat.shape)
+
+
+def _run_shape(n: int, nruns: int, block: int) -> tuple[int, int]:
+    """(L, total): run length padded to a power of two, run count likewise,
+    total floored at one block. Shared by the kernel drivers and the
+    closed-form launch count so the two can never disagree on geometry."""
+    if nruns <= 0 or n % nruns:
+        raise ValueError(
+            f"kway_merge needs len(x) divisible by nruns, got n={n} "
+            f"nruns={nruns}"
+        )
+    L = C.next_pow2(n // nruns)
+    total = max(C.next_pow2(nruns) * L, block)
+    return L, total
+
+
+def _merge_geometry(n: int, nruns: int) -> tuple[int, int, int, int, int]:
+    rows, cols, block = SK._geometry()
+    L, total = _run_shape(n, nruns, block)
+    return rows, cols, block, L, total
+
+
+def _pad_runs(flat, nruns, run_len, L, total, fill):
+    """Pad each run to L (tail sentinels stay per-run) then the whole
+    buffer to ``total`` — sentinel-only runs, constant hence direction-free.
+    """
+    if run_len != L:
+        v = flat.reshape(nruns, run_len)
+        padded = jnp.concatenate(
+            [v, jnp.full((nruns, L - run_len), fill, dtype=flat.dtype)],
+            axis=1,
+        ).reshape(-1)
+    else:
+        padded = flat
+    return C.pad_to(padded, total, fill)
+
+
+def kway_merge(keys: jax.Array, nruns: int, *, counts=None) -> jax.Array:
+    """Merge ``nruns`` consecutive sorted ascending runs of ``keys`` into
+    one sorted array of the same length.  Slots past ``counts[r]`` in run r
+    (when given) are treated as absent: masked to type-max, they sort to the
+    global tail.  The valid merged prefix has length ``sum(counts)``."""
+    n = keys.shape[0]
+    if n == 0 or nruns == 1:
+        return mask_run_tails(keys, counts, max(nruns, 1))
+    rows, cols, block, L, total = _merge_geometry(n, nruns)
+    pad = C.type_max(keys.dtype)
+    flat = mask_run_tails(keys, counts, nruns)
+    flat = _pad_runs(flat, nruns, n // nruns, L, total, pad)
+    flat = _reverse_odd_runs(flat, L)
+    k2d, _ = SK._sort_network(flat.reshape(-1, cols), None, total,
+                              tie_break=False, rows=rows, cols=cols,
+                              first_k=2 * L)
+    return k2d.reshape(-1)[:n]
+
+
+def kway_merge_kv(
+    keys: jax.Array, vals: jax.Array, nruns: int, *,
+    counts=None, tie_break: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Key-value k-way merge: pairs ride the exchanges intact.  With
+    ``tie_break=True`` each run must be (key, value)-lexicographically
+    sorted and the output is the stable lexicographic merge."""
+    n = keys.shape[0]
+    if n == 0 or nruns == 1:
+        return (mask_run_tails(keys, counts, max(nruns, 1)),
+                mask_run_tails(vals, counts, max(nruns, 1)))
+    rows, cols, block, L, total = _merge_geometry(n, nruns)
+    pad_k = C.type_max(keys.dtype)
+    pad_v = C.type_max(vals.dtype)
+    run_len = n // nruns
+    fk = mask_run_tails(keys, counts, nruns)
+    fv = mask_run_tails(vals, counts, nruns, fill=pad_v)
+    fk = _pad_runs(fk, nruns, run_len, L, total, pad_k)
+    fv = _pad_runs(fv, nruns, run_len, L, total, pad_v)
+    fk = _reverse_odd_runs(fk, L)
+    fv = _reverse_odd_runs(fv, L)
+    k2d, v2d = SK._sort_network(fk.reshape(-1, cols), fv.reshape(-1, cols),
+                                total, tie_break=tie_break,
+                                rows=rows, cols=cols, first_k=2 * L)
+    return k2d.reshape(-1)[:n], v2d.reshape(-1)[:n]
+
+
+def merge_launches(n: int, nruns: int, *, hyper: int | None = None,
+                   block: int | None = None) -> int:
+    """Closed-form Pallas launch count of one ``kway_merge`` call — the
+    merge-phase analogue of ``sort_kernel.cross_launches`` (DESIGN.md §2b).
+    Always strictly below the full-network count once cross phases exist."""
+    if n == 0 or nruns <= 1:
+        return 0
+    if block is None:
+        _, _, block = SK._geometry()
+    if hyper is None:
+        hyper = SK._hyper_order()
+    L, total = _run_shape(n, nruns, block)
+    return SK.network_launches(total, first_k=2 * L, hyper=hyper,
+                               block=block)

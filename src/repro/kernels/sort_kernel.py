@@ -444,19 +444,27 @@ def bitonic_topk_batched(
     return jnp.take_along_axis(keys, order, axis=-1), order
 
 
-def _sort_network(k2d, v2d, total, tie_break, *, rows, cols):
+def _sort_network(k2d, v2d, total, tie_break, *, rows, cols, first_k=2):
+    """Run bitonic phases ``k = first_k, 2·first_k, …, total`` over the 2-D
+    block view. ``first_k=2`` is the full sort. ``first_k=2·L`` resumes the
+    network on data that is already L-run alternating-sorted — this is the
+    k-way merge tail used by ``kernels/merge_kernel.py``: only the merge
+    phases run, the log²-depth build phases below ``first_k`` are skipped."""
     block = rows * cols
     n_blocks = total // block
     hyper = _hyper_order()
     # Phase 1: every stage with k <= block is in-block for all blocks
     # (the block base b*block contributes nothing to (i & k)).
     stages = []
-    k = 2
+    k = first_k
     while k <= min(total, block):
         stages.extend(_stages_upto_block(k, block))
         k *= 2
-    k2d, v2d = _run_inblock(stages, k2d, v2d, tie_break, n_blocks,
-                            rows, cols)
+    if stages:
+        k2d, v2d = _run_inblock(stages, k2d, v2d, tie_break, n_blocks,
+                                rows, cols)
+    # (when first_k > block the loop above never ran and k == first_k: the
+    # cross loop starts directly at the first merge phase)
     # Phase 2: k > block — cross stages at block distances k/(2·block) … 1,
     # then the in-block finish. Fused: windows of up to ``hyper`` stages per
     # launch, the last window absorbing the finish. hyper == 0 keeps the
@@ -489,6 +497,27 @@ def _sort_network(k2d, v2d, total, tie_break, *, rows, cols):
     return k2d, v2d
 
 
+def network_launches(total: int, *, first_k: int = 2, hyper: int,
+                     block: int) -> int:
+    """Closed-form launch count of ``_sort_network(total, first_k=…)``:
+    one in-block launch if any phase fits a block, then per cross phase
+    ``⌈i/m⌉`` fused launches (``i+1`` unfused) for ``i = log₂(k/block)``."""
+    launches = 0
+    k = first_k
+    if k <= min(total, block):
+        launches += 1
+        while k <= min(total, block):
+            k *= 2
+    while k <= total:
+        i = (k // block).bit_length() - 1  # cross stages this phase
+        if hyper <= 0:
+            launches += i + 1
+        else:
+            launches += -(-i // hyper)
+        k *= 2
+    return launches
+
+
 def cross_launches(n: int, *, hyper: int | None = None,
                    block: int | None = None) -> int:
     """Closed-form launch count of the network for an n-element sort —
@@ -499,13 +528,4 @@ def cross_launches(n: int, *, hyper: int | None = None,
     if hyper is None:
         hyper = _hyper_order()
     total = max(C.next_pow2(n), block)
-    launches = 1  # phase-1 in-block
-    k = 2 * block
-    while k <= total:
-        i = (k // block).bit_length() - 1  # cross stages this phase
-        if hyper <= 0:
-            launches += i + 1
-        else:
-            launches += -(-i // hyper)
-        k *= 2
-    return launches
+    return network_launches(total, first_k=2, hyper=hyper, block=block)

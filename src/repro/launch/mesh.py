@@ -27,3 +27,18 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n // model) or 1
     return compat.make_mesh((data, model), ("data", "model"))
+
+
+def axis_domain(axis_name: str) -> str:
+    """Interconnect domain a mesh axis's collectives traverse: ``"ici"``
+    (direct chip-to-chip — the paper's GPUDirect/NVLink analogue) or
+    ``"host"`` (cross-pod DCN / staged through host memory — the paper's
+    through-CPU-RAM MPI analogue).
+
+    Only the ``pod`` axis crosses the slow domain in this repo's meshes.
+    ``examples/distributed_sort.py`` picks the link rate it feeds
+    ``benchmarks/cost.py::sihsort_cost`` from this, so the modelled
+    4.93×-style direct-vs-staged economics follow the axis being sorted
+    over.
+    """
+    return "host" if axis_name == "pod" else "ici"

@@ -1,0 +1,216 @@
+"""k-way merge kernel (kernels/merge_kernel.py, DESIGN.md §2b) vs numpy.
+
+Pins: the merge of P pre-sorted capacity runs with ragged valid counts
+equals np.sort of the valid elements (sentinel tail after), across
+duplicate-heavy / constant / lognormal key distributions × f32 / i32 / bf16
+× P ∈ {2, 4, 8} (hypothesis property sweep); stable key-value tie-break on
+lex-sorted runs; launch counts match the closed form and stay strictly
+below the full network's; registry dispatch parity between backends.
+
+Run under a shrunk (8, 128) = 1 Ki block so the cross-stage machinery
+engages at test-sized inputs (same idiom as test_sort_fused.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # the property sweep needs hypothesis; everything else runs without
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro import core as ak  # noqa: E402
+from repro.kernels import common as KC  # noqa: E402
+from repro.kernels import merge_kernel as MK  # noqa: E402
+from repro.kernels import sort_kernel as SK  # noqa: E402
+
+ROWS, COLS = 8, 128
+BLOCK = ROWS * COLS
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "bf16": jnp.bfloat16}
+
+
+def _scope():
+    return KC.tuning_scope(block_rows=ROWS, block_cols=COLS)
+
+
+def _runs(rng, dist, dtype, nruns, run_len):
+    """(nruns, run_len) each row sorted ascending, in the target dtype."""
+    if dist == "duplicates":
+        raw = rng.integers(-5, 5, size=(nruns, run_len)).astype(np.float32)
+    elif dist == "constant":
+        raw = np.full((nruns, run_len), 3.0, np.float32)
+    else:  # lognormal — the skewed case splitter refinement exists for
+        raw = rng.lognormal(0.0, 2.0, size=(nruns, run_len)).astype(
+            np.float32
+        )
+    if dtype == jnp.int32:
+        x = jnp.asarray(raw.astype(np.int32))
+    else:
+        x = jnp.asarray(raw).astype(dtype)
+    return jnp.sort(x, axis=1)
+
+
+def _np_keys(x):
+    if x.dtype == jnp.bfloat16:
+        return np.asarray(x.astype(jnp.float32))
+    return np.asarray(x)
+
+
+def _check_ragged_merge(dist, dtype_key, nruns, run_len, seed):
+    rng = np.random.default_rng(seed)
+    dtype = DTYPES[dtype_key]
+    runs = _runs(rng, dist, dtype, nruns, run_len)
+    counts = rng.integers(0, run_len + 1, size=nruns).astype(np.int32)
+    with _scope():
+        got = MK.kway_merge(runs.reshape(-1), nruns,
+                            counts=jnp.asarray(counts))
+    got = _np_keys(got)
+    valid = np.concatenate(
+        [_np_keys(runs)[r, : counts[r]] for r in range(nruns)]
+    )
+    np.testing.assert_array_equal(got[: valid.size], np.sort(valid))
+    # the masked tail is all type-max sentinel
+    if valid.size < got.size:
+        pad = _np_keys(KC.type_max(dtype).reshape(1))[0]
+        np.testing.assert_array_equal(
+            got[valid.size:], np.full(got.size - valid.size, pad)
+        )
+
+
+@pytest.mark.parametrize("dist", ["duplicates", "constant", "lognormal"])
+@pytest.mark.parametrize("dtype_key", ["f32", "i32", "bf16"])
+@pytest.mark.parametrize("nruns", [2, 4, 8])
+def test_merge_ragged_counts_equal_npsort(dist, dtype_key, nruns):
+    """The full dist × dtype × P grid at a deterministic awkward length
+    (runs cross the block boundary after pow2 padding)."""
+    _check_ragged_merge(dist, dtype_key, nruns, run_len=300,
+                        seed=nruns * 31 + len(dist))
+
+
+@pytest.mark.parametrize("nruns", [3, 6])
+def test_merge_non_pow2_run_count(nruns):
+    """Non-power-of-two P (a 3- or 6-device mesh is legal) pads with
+    sentinel-only runs — that branch must merge correctly too."""
+    _check_ragged_merge("lognormal", "f32", nruns, run_len=500,
+                        seed=nruns)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        dist=st.sampled_from(["duplicates", "constant", "lognormal"]),
+        dtype_key=st.sampled_from(["f32", "i32", "bf16"]),
+        nruns=st.sampled_from([2, 3, 4, 8]),
+        run_len=st.integers(min_value=1, max_value=700),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_merge_ragged_counts_property(dist, dtype_key, nruns, run_len,
+                                          seed):
+        _check_ragged_merge(dist, dtype_key, nruns, run_len, seed)
+
+
+@pytest.mark.parametrize("nruns", [2, 4, 8])
+def test_merge_full_runs_no_counts(nruns):
+    rng = np.random.default_rng(nruns)
+    runs = _runs(rng, "lognormal", jnp.float32, nruns, 3 * BLOCK // 2)
+    with _scope():
+        got = MK.kway_merge(runs.reshape(-1), nruns)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.sort(np.asarray(runs).reshape(-1))
+    )
+
+
+@pytest.mark.parametrize("nruns", [2, 8])
+def test_merge_kv_stable_tie_break(nruns):
+    """Lex-sorted input runs must merge into the global lexicographic
+    order: equal keys keep ascending payload — the stable merge."""
+    rng = np.random.default_rng(7)
+    run_len = 2 * BLOCK
+    k = rng.integers(0, 6, size=(nruns, run_len)).astype(np.int32)
+    v = rng.integers(0, 10**6, size=(nruns, run_len)).astype(np.int32)
+    order = np.lexsort((v, k), axis=-1)
+    k = np.take_along_axis(k, order, axis=1)
+    v = np.take_along_axis(v, order, axis=1)
+    with _scope():
+        gk, gv = MK.kway_merge_kv(
+            jnp.asarray(k.reshape(-1)), jnp.asarray(v.reshape(-1)), nruns,
+            tie_break=True,
+        )
+    want = np.lexsort((v.reshape(-1), k.reshape(-1)))
+    np.testing.assert_array_equal(np.asarray(gk), k.reshape(-1)[want])
+    np.testing.assert_array_equal(np.asarray(gv), v.reshape(-1)[want])
+
+
+def test_merge_kv_pairs_survive_with_counts():
+    rng = np.random.default_rng(11)
+    nruns, run_len = 4, 900
+    k = np.sort(rng.normal(size=(nruns, run_len)).astype(np.float32), axis=1)
+    v = rng.integers(0, 10**6, size=(nruns, run_len)).astype(np.int32)
+    counts = rng.integers(0, run_len + 1, size=nruns).astype(np.int32)
+    with _scope():
+        gk, gv = MK.kway_merge_kv(
+            jnp.asarray(k.reshape(-1)), jnp.asarray(v.reshape(-1)), nruns,
+            counts=jnp.asarray(counts),
+        )
+    nv = int(counts.sum())
+    got = sorted(zip(np.asarray(gk)[:nv].tolist(),
+                     np.asarray(gv)[:nv].tolist()))
+    want = sorted(
+        (k[r, i].item(), v[r, i].item())
+        for r in range(nruns) for i in range(counts[r])
+    )
+    assert got == want
+
+
+@pytest.mark.parametrize("nruns", [2, 4, 8])
+@pytest.mark.parametrize("hyper", [0, 3])
+def test_merge_launches_counted_and_below_full_sort(nruns, hyper):
+    n = nruns * 4 * BLOCK
+    x = jax.ShapeDtypeStruct((n,), jnp.float32)
+    with KC.tuning_scope(block_rows=ROWS, block_cols=COLS,
+                         sort_hyper=hyper):
+        SK.reset_launch_count()
+        jax.eval_shape(lambda a: MK.kway_merge(a, nruns), x)
+        counted = SK.launch_count()
+        assert counted == MK.merge_launches(n, nruns)
+        # the tentpole claim: merging pre-sorted runs must launch strictly
+        # fewer kernels than rebuilding the order from scratch
+        assert MK.merge_launches(n, nruns) < SK.cross_launches(n)
+
+
+def test_registry_dispatch_parity_and_switch_below():
+    rng = np.random.default_rng(3)
+    runs = _runs(rng, "duplicates", jnp.float32, 8, 512)
+    flat = runs.reshape(-1)
+    with _scope():
+        a = ak.merge(flat, 8, backend="jnp")
+        b = ak.merge(flat, 8, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # below switch_below the pallas request demotes to the portable path:
+    # no pallas launches traced
+    with KC.tuning_scope(block_rows=ROWS, block_cols=COLS):
+        with ak.tuning.overrides({"merge": {"switch_below": 1 << 20}}):
+            SK.reset_launch_count()
+            jax.eval_shape(
+                lambda v: ak.merge(v, 8, backend="pallas"), flat
+            )
+            assert SK.launch_count() == 0
+
+
+def test_single_run_and_empty_are_identity():
+    x = jnp.asarray(np.sort(np.random.default_rng(0).normal(size=100))
+                    .astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(MK.kway_merge(x, 1)), np.asarray(x)
+    )
+    empty = jnp.zeros((0,), jnp.float32)
+    assert MK.kway_merge(empty, 1).shape == (0,)
+
+
+def test_bad_geometry_raises():
+    x = jnp.zeros((10,), jnp.float32)
+    with pytest.raises(ValueError):
+        MK.kway_merge(x, 3)  # 10 % 3 != 0
