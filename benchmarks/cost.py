@@ -36,6 +36,32 @@ LAUNCH = 20e-6       # per-collective latency, accelerators
 CPU_SORT_RATE = 1.5e9
 
 
+# -- single-call primitive model (used by repro.tune's candidate pruning) --
+# The portable (jnp) path runs the same algorithmic passes through XLA's
+# generic lowering: per-op dispatch overhead plus an effective bandwidth
+# well below streamed HBM (unfused elementwise chains re-materialise;
+# comparison sorts gather). The Pallas path pays a launch latency per
+# kernel but streams padded blocks at full HBM rate. These are MODEL
+# constants — deterministic by construction, so a CI tune pass with the
+# model-based measure produces the same cache on every machine (wall-clock
+# interpret-mode timing must never leak into a cache a TPU run would read).
+JNP_OVERHEAD_S = 2e-6         # XLA per-op dispatch overhead
+JNP_STREAM_BW = 0.5 * HBM     # unfused streaming lowering, effective
+JNP_SORT_BW = 0.05 * HBM      # comparison sort: gather-bound lowering
+
+
+def pallas_model_time(hbm_bytes, launches):
+    """Modelled seconds of a Pallas execution: per-launch latency plus the
+    modelled HBM traffic at full streamed rate."""
+    return launches * LAUNCH + hbm_bytes / HBM
+
+
+def jnp_model_time(n_bytes, passes, bw=JNP_STREAM_BW):
+    """Modelled seconds of the portable path: dispatch overhead plus
+    ``passes`` full-array passes at the lowering's effective bandwidth."""
+    return JNP_OVERHEAD_S + passes * n_bytes / bw
+
+
 def t_accel(n_bytes, link):
     local = 2 * SORT_PASSES * n_bytes / HBM
     exchange = n_bytes / link + 3 * LAUNCH

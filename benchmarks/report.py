@@ -206,10 +206,53 @@ def roofline_table(recs, dr_recs=None):
     return "\n".join(lines), rows
 
 
+def tuned_vs_default_table(cache_path=None):
+    """Per-primitive modelled speedup of the autotuned knobs over the
+    default resolution, read from the repro.tune cache — makes the perf
+    trajectory of *tuning itself* visible across PRs (the BENCH_autotune
+    analogue of the roofline tables). Missing/foreign caches degrade to a
+    hint line, never an error."""
+    try:
+        from repro.tune import cache as tcache
+    except ImportError:
+        return "(repro.tune not importable; run with PYTHONPATH=src:.)"
+    path = cache_path or tcache.default_path()
+    if not os.path.exists(path):
+        return (f"(no autotune cache at {path}; populate with "
+                f"`PYTHONPATH=src python -m repro.tune --model`)")
+    try:
+        doc = tcache.validate_file(path)
+    except (ValueError, json.JSONDecodeError) as e:
+        return f"(autotune cache at {path} failed validation: {e})"
+    fp = doc["fingerprint"]
+    lines = [
+        f"cache: {path} — device {fp['device_kind']} "
+        f"backend={fp['backend']} interpret={fp['interpret']}",
+        "",
+        "| key | chosen backend | knobs (non-default) | modelled speedup "
+        "| source |",
+        "|---|---|---|---|---|",
+    ]
+    for key in sorted(doc["entries"]):
+        e = doc["entries"][key]
+        knobs = ", ".join(
+            f"{k}={v}" for k, v in sorted((e.get("knobs") or {}).items())
+        )
+        sp = e.get("speedup")
+        lines.append(
+            f"| {key} | {e.get('backend')} | {knobs or '(defaults)'} | "
+            f"{f'{sp:.2f}x' if sp else '-'} | {e.get('source')} |"
+        )
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     ap.add_argument("--roofline-dir", default="results/roofline")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="repro.tune cache JSON (default: the tune "
+                         "subsystem's default path)")
     ap.add_argument("--out", default="results/report.md")
     args = ap.parse_args()
 
@@ -225,6 +268,8 @@ def main():
         with open(os.path.join(args.roofline_dir, "summary.json"),
                   "w") as f:
             json.dump(rows, f, indent=1, default=float)
+    parts += ["\n\n## Tuned vs default (autotune cache)\n",
+              tuned_vs_default_table(args.autotune_cache)]
     text = "".join(parts)
     with open(args.out, "w") as f:
         f.write(text)

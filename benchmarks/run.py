@@ -15,9 +15,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
 Sizes are CPU-container scale; the harness structure (not absolute numbers)
 reproduces the paper's tables. TPU-derived numbers live in EXPERIMENTS.md.
 
-``--quick`` runs only the dispatch + sort-gate rows (the CI benchmark smoke
-job: scripts must not bit-rot unexecuted, and the sort gate must hold on
-every push) at a reduced size, without touching BENCH_sort.json.
+``--quick`` runs only the dispatch + sort-gate + autotune-smoke rows (the
+CI benchmark smoke job: scripts must not bit-rot unexecuted, and the sort
+gate must hold on every push) at a reduced size, without touching
+BENCH_sort.json — the autotune smoke DOES append its (deterministic,
+model-measured) entry to BENCH_autotune.json so the tuning trajectory is
+visible across PRs.
+
+``--tune`` runs the full autotune driver sweep (model-based measure) and
+emits one row per cache entry.
 """
 from __future__ import annotations
 
@@ -25,11 +31,127 @@ import argparse
 import glob
 import json
 import os
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_AUTOTUNE_JSON = os.path.join(REPO, "BENCH_autotune.json")
 
 
 def _emit(rows):
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def autotune_rows(json_path: str | None = BENCH_AUTOTUNE_JSON,
+                  cache_path: str | None = None,
+                  sizes=(4096, 131072), full: bool = False, cache=None):
+    """Autotune smoke: model-measured tune pass + the subsystem's gates.
+
+    Asserted here (and re-run by the CI ``tune-smoke`` job):
+
+      * the written cache file validates against its schema;
+      * a FRESH ``TuneCache.load`` (what a second process does) serves
+        ``resolve()`` from disk — hit counter > 0, zero misses: the second
+        process never re-searches;
+      * with the cache attached, ``backend="auto"`` resolves at least one
+        primitive to a non-default knob set (the measured crossover), and
+        a scoped override still beats the cached value.
+
+    The measure is the deterministic ``benchmarks/cost.py`` model — CPU
+    interpret-mode wall-clock must never populate a cache (tune/cache.py
+    fingerprints guard the read side; CI never writes one to begin with).
+
+    ``cache``: a TuneCache that was already swept and saved (the --tune
+    path reuses its sweep instead of searching twice); ``sizes`` must then
+    match the sizes it was swept at.
+    """
+    from repro import tune as T
+    from repro.core import registry
+    from repro.kernels import common as KC
+
+    from benchmarks.sort_throughput import append_json
+
+    if cache is None:
+        primitives = None if full else ("sort", "sort_kv", "mapreduce",
+                                        "accumulate", "topk")
+        cache_path = cache_path or os.path.join(
+            tempfile.mkdtemp(prefix="repro-tune-"), "autotune.json"
+        )
+        cache = T.tune_all(
+            sizes=sizes, dtypes=("float32",), primitives=primitives,
+            measure=T.model_measure, path=cache_path,
+        )
+        cache.save()
+    else:
+        cache_path = cache.path
+    T.validate_file(cache_path)  # GATE: schema-valid on disk
+
+    # second pass, fresh load — the cross-process path
+    c2 = T.TuneCache.load(cache_path)
+    assert c2.compatible and len(c2) == len(cache)
+    n_big = max(sizes)
+    defaults = registry.tuning.lookup("sort")  # outside any scope/cache
+    with registry.tuning.using_cache(c2):
+        knobs, hint = registry.tuning.resolve(
+            "sort", n=n_big, dtype="float32"
+        )
+        # GATE: measured crossover — auto resolves a non-default knob set
+        nondefault = {
+            k: v for k, v in knobs.items() if v != defaults[k]
+        }
+        assert hint is not None and nondefault, (hint, knobs)
+        # GATE: scoped overrides still beat cached values
+        with registry.tuning.overrides(sort={"block_cols": 256}):
+            over, _ = registry.tuning.resolve(
+                "sort", n=n_big, dtype="float32"
+            )
+        assert over["block_cols"] == 256
+    # GATE: the second pass was served from disk, never re-searched
+    assert c2.stats.hits > 0 and c2.stats.misses == 0, c2.stats.as_dict()
+
+    tuned = sum(1 for e in cache.entries.values() if e.get("knobs"))
+    best = cache.lookup("sort", "float32", KC.size_class(n_big))
+    sp = best.get("speedup")
+    rows = [
+        (
+            f"autotune.model.n{n_big}",
+            best.get("t_us") or 0.0,
+            f"sort->{best['backend']} knobs={best['knobs']} "
+            f"speedup={f'{sp:.2f}x' if sp else '-'}(modelled)",
+        ),
+        (
+            "autotune.gate",
+            0.0,
+            f"schema: PASS; 2nd-pass hits={c2.stats.hits} misses=0: PASS; "
+            f"auto->non-default knobs: PASS; override precedence: PASS",
+        ),
+    ]
+    if json_path:
+        entry = {
+            "entry": "autotune_smoke",
+            "sizes": list(sizes),
+            "primitives": sorted(
+                {k.split("|")[0] for k in cache.entries}
+            ),
+            "entries": len(cache),
+            "nondefault_entries": tuned,
+            "sort_best": best,
+            "second_pass_stats": c2.stats.as_dict(),
+            "fingerprint": cache.fingerprint,
+            "measure": "model",
+        }
+        # the model measure is deterministic: an entry identical to the
+        # last one recorded adds no trajectory information — skip it so
+        # local verification runs don't dirty the checked-in file
+        try:
+            with open(json_path) as f:
+                last = json.load(f)["entries"][-1]
+        except (OSError, json.JSONDecodeError, KeyError, IndexError,
+                TypeError):
+            last = None
+        if entry != last:
+            append_json(json_path, entry)
+    return rows
 
 
 def roofline_rows(path="results/roofline"):
@@ -55,10 +177,25 @@ def roofline_rows(path="results/roofline"):
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="dispatch + sort-gate rows only (CI smoke)")
+                    help="dispatch + sort-gate + autotune rows (CI smoke)")
+    ap.add_argument("--tune", action="store_true",
+                    help="full model-based autotune sweep, one row per "
+                         "cache entry (driver: python -m repro.tune)")
     args = ap.parse_args(argv)
 
     from benchmarks import dispatch_overhead, sort_throughput
+
+    if args.tune:
+        from repro import tune as T
+
+        cache = T.tune_all(measure=T.model_measure)
+        cache.save()
+        for line in T.report_lines(cache):
+            print(line)
+        # gate the cache we just swept — no second search
+        _emit(autotune_rows(json_path=None, cache=cache,
+                            sizes=T.DEFAULT_SIZES))
+        return
 
     if args.quick:
         _emit(dispatch_overhead.run(n=16_384, iters=10))
@@ -68,6 +205,9 @@ def main(argv=None) -> None:
         # distributed gates are trace-only (counted collectives/launches,
         # no execution), so the full n=2^20, P=8 geometry stays cheap
         _emit(sort_throughput.run_distributed(json_path=None))
+        # autotune smoke: deterministic model measure, appends the
+        # BENCH_autotune.json trajectory entry
+        _emit(autotune_rows())
         return
 
     from benchmarks import arithmetic, cost, scaling, throughput

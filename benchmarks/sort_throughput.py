@@ -167,7 +167,7 @@ def run(n: int = 2**20, dtype=jnp.float32, repeats: int = 3,
     ]
 
     if json_path:
-        _append_json(json_path, {
+        append_json(json_path, {
             "n": n,
             "dtype": str(jnp.dtype(dtype)),
             "hyper": hyper,
@@ -322,7 +322,7 @@ def run_distributed(n: int = 2**20, nranks: int = 8,
         ),
     ]
     if json_path:
-        _append_json(json_path, {
+        append_json(json_path, {
             "entry": "sihsort_distributed",
             "n": n,
             "nranks": nranks,
@@ -343,7 +343,10 @@ def run_distributed(n: int = 2**20, nranks: int = 8,
     return rows
 
 
-def _append_json(path: str, entry: dict) -> None:
+def append_json(path: str, entry: dict) -> None:
+    """Append one entry to a ``{"schema": 1, "entries": [...]}`` trajectory
+    file (shared by BENCH_sort.json and BENCH_autotune.json — one idiom,
+    one reader)."""
     doc = {"schema": 1, "entries": []}
     if os.path.exists(path):
         try:

@@ -44,3 +44,30 @@ np.testing.assert_array_equal(np.asarray(s2), np.asarray(hay))
 np.testing.assert_allclose(float(r2),
                            float(ak.reduce(jnp.add, x, init=0.0)), rtol=1e-4)
 print("pallas backend    : identical results ✓")
+
+# -- autotune: measure once, resolve forever --------------------------------
+# Search the legal knob space per (primitive, dtype, size-class) and persist
+# the verdicts per device (DESIGN.md §7). `model_measure` evaluates the
+# benchmarks/cost.py model — deterministic and instant; drop it to time the
+# real wall clock on actual hardware. With the cache attached,
+# backend="auto" picks pallas-vs-jnp from the MEASURED crossover and runs
+# the measured-best block geometry; scoped overrides still win.
+import os
+import tempfile
+
+from repro import tune
+
+cache = tune.tune_all(
+    sizes=(4096, 2**17), dtypes=("float32",),
+    primitives=("sort", "mapreduce"), measure=tune.model_measure,
+    path=os.path.join(tempfile.mkdtemp(), "autotune.json"),
+)
+cache.save()                                   # versioned, fingerprinted
+cache = tune.TuneCache.load(cache.path)        # what a later run does
+with ak.tuning.using_cache(cache):
+    big = jnp.asarray(rng.normal(size=2**17).astype(np.float32))
+    s3 = ak.merge_sort(big)                    # auto -> measured backend
+    entry = cache.lookup("sort", "float32", 17)
+np.testing.assert_array_equal(np.asarray(s3), np.sort(np.asarray(big)))
+print(f"autotuned sort    : {entry['backend']} {entry['knobs']} "
+      f"({entry['speedup']:.1f}x modelled, cache hits={cache.stats.hits})")

@@ -44,6 +44,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
+import types
 from collections import OrderedDict
 from typing import Any, Callable
 
@@ -145,14 +146,26 @@ def _validate_tuning(name: str, kv: dict, allowed=TUNABLE_KEYS) -> None:
 
 
 class TuningTable:
-    """Central per-primitive performance knobs: defaults < global sets <
-    scoped overrides (innermost wins). Thread-local scoping, so concurrent
-    serve loops can tune independently."""
+    """Central per-primitive performance knobs.
+
+    Precedence, weakest first (DESIGN.md §7): registered defaults < active
+    named **presets** (``preset()`` scopes — a caller's hand-rolled profile,
+    e.g. the serve sampler) < the attached **autotune cache** (measured per
+    (primitive, dtype, size-class); ``resolve()`` only) < global ``set()``
+    < scoped ``overrides()`` (innermost wins). Explicit always beats
+    measured, measured beats hand-rolled. All scoped state — ``preset()``,
+    ``overrides()``, ``using_cache()`` — is thread-local, so concurrent
+    serve loops can tune independently; ``set()`` and ``attach_cache()``
+    are deliberate process-global installs."""
 
     def __init__(self):
         self._defaults: dict[str, dict] = {}
         self._allowed: dict[str, tuple] = {}
         self._global: dict[str, dict] = {}
+        self._presets: dict[str, dict[str, dict]] = {}
+        #: attached autotune cache (duck-typed: ``.lookup(name, dtype,
+        #: size_class)`` — see repro.tune.cache.TuneCache). None = off.
+        self._autotune = None
         self._tls = threading.local()
 
     def _register(self, name: str, defaults: dict | None, allowed) -> None:
@@ -175,13 +188,56 @@ class TuningTable:
                 f"{sorted(self._defaults)}"
             )
 
+    def _preset_stack(self) -> list:
+        if not hasattr(self._tls, "presets"):
+            self._tls.presets = []
+        return self._tls.presets
+
     def lookup(self, name: str) -> dict:
+        """Size-agnostic knob resolution — ``resolve`` minus the cache
+        layer (no size, no cache key). One merge implementation for both."""
+        return self.resolve(name)[0]
+
+    def resolve(self, name: str, *, n: int | None = None,
+                dtype=None) -> tuple[dict, str | None]:
+        """Size/dtype-aware knob resolution — ``lookup`` plus the attached
+        autotune cache, consulted at the measured layer (above presets,
+        below explicit ``set``/``overrides``).
+
+        Returns ``(knobs, backend_hint)``: ``backend_hint`` is the cache's
+        measured-best backend for this (primitive, dtype, size-class) key,
+        or ``None`` when no cache is attached / the key misses / the entry
+        carries no verdict. ``Primitive.__call__`` honours the hint only
+        when the caller's policy is ``auto`` — an explicit backend, a
+        scoped ``dispatch.backend(...)`` or a ``switch_below`` override
+        still wins."""
         self._check_name(name)
         out = dict(self._defaults[name])
+        for mapping in self._preset_stack():
+            out.update(mapping.get(name, {}))
+        hint = None
+        cache = self._active_cache()
+        if cache is not None and n:
+            entry = cache.lookup(
+                name, str(dtype), KC.size_class(int(n))
+            )
+            if entry:
+                allowed = self._allowed[name]
+                knobs = {
+                    k: v for k, v in (entry.get("knobs") or {}).items()
+                    if k in allowed
+                }
+                try:
+                    _validate_tuning(name, knobs, allowed)
+                except (KeyError, ValueError):
+                    knobs = {}  # hand-edited/corrupt entry: defaults win
+                out.update(knobs)
+                if entry.get("backend") in ("jnp", "pallas"):
+                    hint = entry["backend"]
         out.update(self._global.get(name, {}))
         for layer in self._stack():
             out.update(layer.get(name, {}))
-        return out
+        return out, hint
 
     def set(self, name: str, **kv) -> None:
         """Globally override tunables for one primitive."""
@@ -193,7 +249,89 @@ class TuningTable:
         if name is None:
             self._global.clear()
         else:
+            # a typo ("sortt") must not silently reset nothing
+            self._check_name(name)
             self._global.pop(name, None)
+
+    # -- named presets (hand-rolled caller profiles) -----------------------
+    def register_preset(self, preset: str, mapping: dict[str, dict]) -> dict:
+        """Register a named knob profile ({primitive: {tunable: value}}),
+        validated now, applied via ``preset(name)`` scopes. Presets sit
+        BELOW the autotune cache: a measured knob set overrides the
+        hand-rolled profile, and ``repro.tune`` seeds the cache from them
+        so un-measured keys keep the caller's numbers. Returns a READ-ONLY
+        view of the validated snapshot (what ``preset()`` applies):
+        mutating the exported profile raises instead of silently diverging
+        from the live preset — re-register to change it."""
+        checked = {}
+        for name, kv in mapping.items():
+            self._check_name(name)
+            _validate_tuning(name, kv, self._allowed[name])
+            checked[name] = dict(kv)
+        self._presets[preset] = checked
+        return types.MappingProxyType(
+            {k: types.MappingProxyType(v) for k, v in checked.items()}
+        )
+
+    def preset_names(self) -> tuple:
+        return tuple(sorted(self._presets))
+
+    def preset_mapping(self, preset: str) -> dict[str, dict]:
+        try:
+            return {k: dict(v) for k, v in self._presets[preset].items()}
+        except KeyError:
+            raise KeyError(
+                f"unknown preset {preset!r}; registered: "
+                f"{sorted(self._presets)}"
+            ) from None
+
+    @contextlib.contextmanager
+    def preset(self, preset: str):
+        """Scoped activation of a registered preset (weakest layer above
+        the registered defaults)."""
+        mapping = self._presets.get(preset)
+        if mapping is None:
+            raise KeyError(
+                f"unknown preset {preset!r}; registered: "
+                f"{sorted(self._presets)}"
+            )
+        self._preset_stack().append(mapping)
+        try:
+            yield self
+        finally:
+            self._preset_stack().pop()
+
+    # -- autotune cache attachment -----------------------------------------
+    def _cache_stack(self) -> list:
+        if not hasattr(self._tls, "caches"):
+            self._tls.caches = []
+        return self._tls.caches
+
+    def _active_cache(self):
+        stack = self._cache_stack()
+        return stack[-1] if stack else self._autotune
+
+    @property
+    def autotune(self):
+        return self._active_cache()
+
+    def attach_cache(self, cache) -> None:
+        """Process-global install (``None`` detaches) of an autotune cache;
+        consulted by ``resolve()`` for every registry call until detached.
+        Thread-scoped ``using_cache()`` attachments shadow it."""
+        self._autotune = cache
+
+    @contextlib.contextmanager
+    def using_cache(self, cache):
+        """Scoped, THREAD-LOCAL cache attachment: ``with
+        tuning.using_cache(c): ...``. Inside the scope this thread resolves
+        against ``cache`` (``None`` = explicitly no cache), shadowing any
+        global ``attach_cache`` install; other threads are untouched."""
+        self._cache_stack().append(cache)
+        try:
+            yield cache
+        finally:
+            self._cache_stack().pop()
 
     @contextlib.contextmanager
     def overrides(self, mapping: dict[str, dict] | None = None, **per_prim):
@@ -309,16 +447,35 @@ class Primitive:
             return self.pallas_impl
         return self.jnp_impl
 
-    def _select_backend(self, backend, operands, switch_below: int) -> str:
-        resolved = dispatch.resolve(backend)
+    def _switch_size(self, operands) -> int:
+        """What ``switch_below`` (and the autotune size-class) compares:
+        total elements, or the last-axis length for batched primitives.
+        Non-array first operands (host scalars) count as size 0 — nothing
+        to tile, and no size class to resolve against."""
+        x = operands[0] if operands else None
+        n = getattr(x, "size", 0) if x is not None else 0
+        if n and self.switch_measure == "last_axis" and getattr(
+            x, "ndim", 0
+        ):
+            n = x.shape[-1]
+        return n
+
+    def _select_backend(self, backend, n: int, switch_below: int,
+                        hint: str | None = None) -> str:
+        policy = backend or dispatch.default_backend()
+        if policy == "auto" and hint is not None \
+                and self.pallas_impl is not None:
+            # measured crossover from the attached autotune cache: under an
+            # "auto" policy the cache's per-size-class verdict replaces the
+            # platform default (it was measured on THIS device fingerprint).
+            # Explicit backends and scoped dispatch.backend() still win.
+            resolved = hint
+        else:
+            resolved = dispatch.resolve(backend)
         if resolved != "pallas":
             return resolved
         if self.pallas_impl is None:
             return "jnp"
-        x = operands[0] if operands else None
-        n = x.size if x is not None else 0
-        if n and self.switch_measure == "last_axis" and x.ndim:
-            n = x.shape[-1]
         # AK's host-finish trade-off: tiny inputs skip the tiled kernel
         # (and empty ones always do — nothing to tile).
         if n == 0 or n < switch_below:
@@ -329,11 +486,15 @@ class Primitive:
     def __call__(self, *operands, backend: str | None = None, **opts):
         with self._cache_lock:  # counters are read-modify-write
             self.stats.calls += 1
-        tune = tuning.lookup(self.name)
+        x = operands[0] if operands else None
+        n = self._switch_size(operands)
+        tune, hint = tuning.resolve(
+            self.name, n=n, dtype=getattr(x, "dtype", None)
+        )
         switch_below = opts.pop("switch_below", None)
         if switch_below is None:
             switch_below = tune["switch_below"]
-        resolved = self._select_backend(backend, operands, switch_below)
+        resolved = self._select_backend(backend, n, switch_below, hint)
 
         # interpret/block geometry only reach Pallas kernels; keying the
         # jnp path on them would compile duplicate identical executables

@@ -103,6 +103,16 @@ def next_pow2(n: int) -> int:
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
+def size_class(n: int) -> int:
+    """Pow2 size bucket of an element count: the exponent of next_pow2(n)
+    (0 for n <= 1). The autotune cache (repro.tune) keys measured knobs per
+    (primitive, backend, dtype, size-class); calls bucket the live length
+    through the SAME function so a knob tuned at 2^17 serves every length in
+    (2^16, 2^17]. Kept here, next to the block geometry it buckets, so
+    kernels, the registry and the tuner cannot drift apart."""
+    return 0 if n <= 1 else int(n - 1).bit_length()
+
+
 def pad_to(x: jax.Array, n: int, fill) -> jax.Array:
     """Pad 1-D ``x`` up to length ``n`` with ``fill``."""
     pad = n - x.shape[0]

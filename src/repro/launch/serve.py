@@ -32,12 +32,18 @@ from repro.models import model as M
 # as a declarative table instead of branches). The registry's jit cache does
 # the rest: every primitive here traces once for the whole serve loop
 # instead of once per decode step.
-SAMPLER_TUNING = {
+#
+# Registered as the named preset "sampler": the hand-rolled numbers are the
+# WEAK layer — an attached autotune cache (repro.tune) overrides them with
+# measured per-size-class verdicts, and `repro.tune.tune_all` seeds the
+# cache from this preset so un-measured keys keep these values. An explicit
+# ``ak_tuning=`` argument still applies as scoped overrides (strongest).
+SAMPLER_TUNING = registry.tuning.register_preset("sampler", {
     "argsort_batched": {"switch_below": 4096},
     "topk": {"switch_below": 4096},
     "accumulate": {"switch_below": 4096},
     "searchsorted": {"switch_below": 4096},
-}
+})
 
 
 def sample_logits(rng, logits, *, temperature=1.0, top_k=0, top_p=1.0,
@@ -98,11 +104,15 @@ def serve_loop(params, cfg, prompts, *, max_new: int = 32, cache_len: int,
     """prompts: (B, S_prompt) int32. Returns (generated (B, max_new), stats).
 
     ``ak_tuning``: per-primitive registry overrides for the sampler's AK
-    primitives ({primitive: {tunable: value}}); defaults to SAMPLER_TUNING.
+    primitives ({primitive: {tunable: value}}); default: the "sampler"
+    preset (which a measured autotune cache, when attached, overrides
+    per size class — explicit ak_tuning beats both).
     """
-    with registry.tuning.overrides(
-        SAMPLER_TUNING if ak_tuning is None else ak_tuning
-    ):
+    scope = (
+        registry.tuning.preset("sampler") if ak_tuning is None
+        else registry.tuning.overrides(ak_tuning)
+    )
+    with scope:
         return _serve_loop(
             params, cfg, prompts, max_new=max_new, cache_len=cache_len,
             temperature=temperature, top_k=top_k, top_p=top_p, seed=seed,

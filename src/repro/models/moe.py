@@ -42,14 +42,19 @@ from repro.models import sharding as SH
 # drawn from the central table instead of per-call branches). The registry
 # also caches the jitted kernels, so every MoE layer and every train step
 # shares one trace per (primitive, backend, statics) key.
-ROUTING_TUNING = {
+#
+# Registered as the named preset "moe_routing": these hand-rolled cut-offs
+# are the weak layer — a measured autotune cache (repro.tune), when
+# attached, overrides them per (dtype, size-class), and the tune driver
+# seeds its cache from this preset so un-measured keys keep these values.
+ROUTING_TUNING = registry.tuning.register_preset("moe_routing", {
     "argsort": {"switch_below": 2048},
     "accumulate": {"switch_below": 2048},
     # router top-k over (T, E): switch_below compares the per-ROW length E
     # (registry switch_measure="last_axis") — expert counts are far below
     # any cut-off where the sort-derived path beats lax.top_k
     "topk": {"switch_below": 2048},
-}
+})
 
 
 def moe_init(rng, cfg):
@@ -82,7 +87,7 @@ def _route(p, cfg, x_flat):
     global estimators agree exactly."""
     logits = (x_flat.astype(jnp.float32)) @ p["router"]  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
-    with registry.tuning.overrides(ROUTING_TUNING):
+    with registry.tuning.preset("moe_routing"):
         gate_vals, ids = ak.topk(probs, cfg.top_k)  # paper primitive: topk
     gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
     T = x_flat.shape[0]
@@ -117,7 +122,7 @@ def _dispatch_indices(cfg, ids, T, capacity):
     capacity slots. Returns (perm, slot, keep) over the (T*k,) flat axis."""
     k = cfg.top_k
     flat_ids = ids.reshape(-1)  # (T*k,)
-    with registry.tuning.overrides(ROUTING_TUNING):
+    with registry.tuning.preset("moe_routing"):
         perm = ak.sortperm(flat_ids)  # stable sort by expert — AK sortperm
         sorted_ids = flat_ids[perm]
         counts = ak.bincount(flat_ids, cfg.n_experts)  # AK histogram

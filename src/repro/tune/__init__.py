@@ -1,0 +1,49 @@
+"""repro.tune — the measurement-driven autotuning subsystem (DESIGN.md §7).
+
+The layer between ``benchmarks/`` (which knows what things cost) and
+``core/`` (which knows how to run them): it *measures* its way to the knob
+values the tuning table previously hand-set, and persists the verdicts per
+device so ``backend="auto"`` resolves pallas-vs-jnp from measured crossover
+sizes.
+
+    from repro import tune
+    cache = tune.tune_all(sizes=(4096, 2**17))      # search + measure
+    cache.save()                                     # per-device JSON
+    with ak.tuning.using_cache(tune.TuneCache.load()):
+        ak.merge_sort(x)     # auto backend + knobs from the measured cache
+
+CLI driver: ``python -m repro.tune`` (``--model`` for the deterministic
+cost-model measure CI uses).
+"""
+from repro.tune.cache import (
+    CacheStats,
+    SCHEMA_VERSION,
+    TuneCache,
+    default_path,
+    device_fingerprint,
+    entry_key,
+    validate_doc,
+    validate_file,
+)
+from repro.tune.search import (
+    DEFAULT_DTYPES,
+    DEFAULT_SIZES,
+    TUNED_PRIMITIVES,
+    candidates,
+    make_operands,
+    model_measure,
+    modelled_time,
+    report_lines,
+    search_one,
+    tune_all,
+    wallclock_measure,
+)
+
+__all__ = [
+    "CacheStats", "SCHEMA_VERSION", "TuneCache", "default_path",
+    "device_fingerprint", "entry_key", "validate_doc", "validate_file",
+    "DEFAULT_DTYPES", "DEFAULT_SIZES",
+    "TUNED_PRIMITIVES", "candidates", "make_operands", "model_measure",
+    "modelled_time", "report_lines", "search_one", "tune_all",
+    "wallclock_measure",
+]

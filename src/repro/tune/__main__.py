@@ -1,0 +1,89 @@
+"""Autotune driver: sweep, persist, report.
+
+    PYTHONPATH=src python -m repro.tune [--model] [--cache PATH]
+        [--sizes 4096,131072,1048576] [--dtypes float32,int32]
+        [--primitives sort,mapreduce,...]
+
+Sweeps the registered primitives (plus merge/merge_kv) across the
+size/dtype grid, writes the per-device cache, and prints the chosen knobs
+vs the registered defaults. ``--model`` swaps wall-clock timing for the
+deterministic ``benchmarks/cost.py`` model — the CI mode, and the only
+sensible mode on a machine whose Pallas kernels run in interpret mode
+(wall-clock there describes the Python interpreter, not any device the
+cache's fingerprint could name).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.kernels import common as KC
+from repro.tune import cache as tcache
+from repro.tune import search
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--cache", default=None,
+                    help=f"cache file (default: {tcache.default_path()})")
+    ap.add_argument("--model", action="store_true",
+                    help="use the deterministic cost model, not wall-clock")
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated element counts "
+                         f"(default: {search.DEFAULT_SIZES})")
+    ap.add_argument("--dtypes", default="float32")
+    ap.add_argument("--primitives", default=None,
+                    help="comma-separated subset "
+                         "(default: the full tuned suite)")
+    ap.add_argument("--no-presets", action="store_true",
+                    help="do not seed wildcard entries from named presets")
+    args = ap.parse_args(argv)
+
+    if not args.no_presets:
+        # pull in the caller profiles so their named presets seed the
+        # cache's wildcard entries (tune/search.py::tune_all)
+        try:
+            import repro.launch.serve    # noqa: F401
+            import repro.models.moe      # noqa: F401
+        except ImportError:
+            pass
+
+    sizes = (
+        tuple(int(s) for s in args.sizes.split(","))
+        if args.sizes else search.DEFAULT_SIZES
+    )
+    dtypes = tuple(args.dtypes.split(","))
+    primitives = (
+        tuple(args.primitives.split(",")) if args.primitives else None
+    )
+
+    cache = search.tune_all(
+        sizes=sizes, dtypes=dtypes, primitives=primitives,
+        measure=search.model_measure if args.model else None,
+        path=args.cache, seed_presets=not args.no_presets,
+    )
+    path = cache.save()
+    tcache.validate_file(path)
+
+    fp = cache.fingerprint
+    print(f"autotune cache: {path}")
+    print(f"device: {fp['device_kind']} backend={fp['backend']} "
+          f"interpret={fp['interpret']} "
+          f"measure={'model' if args.model else 'wallclock'}")
+    print(f"entries: {len(cache)} over sizes={sizes} "
+          f"(classes {tuple(KC.size_class(n) for n in sizes)}) "
+          f"dtypes={dtypes}")
+    for line in search.report_lines(cache):
+        print(line)
+    nondefault = sum(
+        1 for e in cache.entries.values() if e.get("knobs")
+    )
+    print(f"non-default knob sets: {nondefault}/{len(cache)} "
+          f"(resolve order: scoped override > cache > preset > default)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

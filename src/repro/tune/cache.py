@@ -1,0 +1,253 @@
+"""Persistent autotune cache — versioned JSON keyed by device fingerprint.
+
+One file holds the measured-best knob set per
+``(primitive, dtype, size-class)`` key for ONE device:
+
+* **fingerprint** — ``jax.devices()[0].device_kind`` + the active jax
+  backend + the Pallas interpret flag. A cache written by a CPU
+  interpret-mode run can therefore never be read by a TPU run (and vice
+  versa): the measurements describe different machines, and silently mixing
+  them is the same artifact class as dividing interpret-mode wall-clock by
+  device rates (the 0.0025 GB/s bug). A fingerprint mismatch is NOT an
+  error — lookups fall back to the registered defaults and count as
+  ``stale``.
+* **schema version** — bumping :data:`SCHEMA_VERSION` invalidates every
+  older file outright: entries are dropped at load and every lookup misses.
+* **atomic writes** — the document is written to a temp file in the target
+  directory and ``os.replace``d into place, so a concurrent reader never
+  sees a torn file.
+* **counters** — ``hits`` / ``misses`` / ``stale`` mirror the registry's
+  per-primitive instrumentation: a second process resolving knobs from a
+  populated cache shows ``hits > 0, misses == 0`` — the proof it never
+  re-searched.
+
+Entry layout (all JSON-native)::
+
+    "sort|float32|c17": {
+        "backend": "pallas",          # measured-best backend for this key
+        "knobs": {"block_cols": 2048} # non-default tunables only
+        "t_us": 45.1,                 # modelled/measured time of the pick
+        "t_default_us": 220.0,        # same measure, default resolution
+        "speedup": 4.9,
+        "source": "model",            # model | wallclock | preset
+    }
+
+Preset seeds use the wildcard key ``"<primitive>|*|*"`` — they apply at any
+dtype/size until an exact measured key shadows them (resolve order:
+scoped override > cache (exact > wildcard/preset) > preset scope >
+default; DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+
+import jax
+
+from repro.kernels import common as KC
+
+SCHEMA_VERSION = 1
+
+#: Knob value types a cache entry may carry (mirrors TUNABLE_KEYS types).
+_KNOB_TYPES = (int, bool, type(None))
+
+
+def default_path() -> str:
+    """Cache location: ``$REPRO_TUNE_CACHE`` or ``~/.cache/repro-ak/``."""
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro-ak", "autotune.json"
+    )
+
+
+def device_fingerprint(interpret: bool | None = None) -> dict:
+    """Identity of the device the measurements describe."""
+    if interpret is None:
+        interpret = KC.interpret_mode()
+    dev = jax.devices()[0]
+    return {
+        "device_kind": dev.device_kind,
+        "backend": jax.default_backend(),
+        "interpret": bool(interpret),
+    }
+
+
+def entry_key(primitive: str, dtype, size_class: int) -> str:
+    return f"{primitive}|{dtype}|c{int(size_class)}"
+
+
+def wildcard_key(primitive: str) -> str:
+    return f"{primitive}|*|*"
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """``hits``: lookup served a cache entry (exact or wildcard/preset).
+    ``misses``: no entry for the key. ``stale``: the file's fingerprint or
+    schema does not match this process — entries exist but are ignored."""
+
+    hits: int = 0
+    misses: int = 0
+    stale: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def validate_doc(doc: dict) -> None:
+    """Structural schema check; raises ``ValueError`` on any violation.
+
+    Used by the CI ``tune-smoke`` job to assert the written file is a cache
+    this module would actually serve."""
+    if not isinstance(doc, dict):
+        raise ValueError("cache document must be a JSON object")
+    if doc.get("schema") != SCHEMA_VERSION:
+        raise ValueError(
+            f"schema {doc.get('schema')!r} != {SCHEMA_VERSION}"
+        )
+    fp = doc.get("fingerprint")
+    if not isinstance(fp, dict) or not {
+        "device_kind", "backend", "interpret"
+    } <= set(fp):
+        raise ValueError(f"bad fingerprint {fp!r}")
+    entries = doc.get("entries")
+    if not isinstance(entries, dict):
+        raise ValueError("entries must be an object")
+    for key, e in entries.items():
+        if key.count("|") != 2:
+            raise ValueError(f"bad entry key {key!r}")
+        if not isinstance(e, dict):
+            raise ValueError(f"entry {key!r} must be an object")
+        if e.get("backend") not in (None, "jnp", "pallas"):
+            raise ValueError(f"entry {key!r}: bad backend {e.get('backend')!r}")
+        knobs = e.get("knobs", {})
+        if not isinstance(knobs, dict) or not all(
+            isinstance(v, _KNOB_TYPES) for v in knobs.values()
+        ):
+            raise ValueError(f"entry {key!r}: bad knobs {knobs!r}")
+
+
+def validate_file(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    validate_doc(doc)
+    return doc
+
+
+class TuneCache:
+    """In-memory view of one on-disk autotune cache (see module doc)."""
+
+    def __init__(self, path: str | None = None,
+                 fingerprint: dict | None = None):
+        self.path = path or default_path()
+        self.fingerprint = fingerprint or device_fingerprint()
+        self.entries: dict[str, dict] = {}
+        self.stats = CacheStats()
+        # counters are read-modify-write on the registry's per-call hot
+        # path; a global attach_cache() install is shared across threads
+        self._stats_lock = threading.Lock()
+        #: False when the loaded file was written for a different device —
+        #: entries are retained (for inspection) but never served.
+        self.compatible = True
+
+    # -- persistence -------------------------------------------------------
+    @classmethod
+    def load(cls, path: str | None = None,
+             fingerprint: dict | None = None) -> "TuneCache":
+        """Load ``path`` (missing/corrupt/old-schema files yield an empty
+        cache; a foreign fingerprint yields an incompatible one — neither is
+        an error, both fall back to the registered defaults)."""
+        cache = cls(path=path, fingerprint=fingerprint)
+        try:
+            with open(cache.path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return cache
+        if not isinstance(doc, dict) or doc.get("schema") != SCHEMA_VERSION:
+            # schema bump invalidates outright: drop the entries
+            return cache
+        entries = doc.get("entries")
+        if isinstance(entries, dict):
+            cache.entries = {
+                k: dict(v) for k, v in entries.items() if isinstance(v, dict)
+            }
+        cache.compatible = doc.get("fingerprint") == cache.fingerprint
+        return cache
+
+    def as_doc(self) -> dict:
+        return {
+            "schema": SCHEMA_VERSION,
+            "fingerprint": dict(self.fingerprint),
+            "entries": {k: dict(v) for k, v in sorted(self.entries.items())},
+        }
+
+    def save(self, path: str | None = None) -> str:
+        """Atomic write: temp file in the target directory + os.replace."""
+        path = path or self.path
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".autotune-", suffix=".json")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.as_doc(), f, indent=1)
+                f.write("\n")
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return path
+
+    # -- entry access ------------------------------------------------------
+    def lookup(self, primitive: str, dtype, size_class: int) -> dict | None:
+        """Serve the entry for one key; exact beats the wildcard preset
+        seed. Counters per the class doc."""
+        if not self.compatible:
+            with self._stats_lock:
+                self.stats.stale += 1
+            return None
+        e = self.entries.get(entry_key(primitive, dtype, size_class))
+        if e is None:
+            e = self.entries.get(wildcard_key(primitive))
+        with self._stats_lock:
+            if e is None:
+                self.stats.misses += 1
+            else:
+                self.stats.hits += 1
+        return e
+
+    def put(self, primitive: str, dtype, size_class: int, *,
+            backend: str | None, knobs: dict, t_us: float | None = None,
+            t_default_us: float | None = None, source: str = "measured"
+            ) -> dict:
+        entry = {
+            "backend": backend,
+            "knobs": dict(knobs),
+            "t_us": t_us,
+            "t_default_us": t_default_us,
+            "speedup": (
+                t_default_us / t_us
+                if t_us and t_default_us else None
+            ),
+            "source": source,
+        }
+        self.entries[entry_key(primitive, dtype, size_class)] = entry
+        return entry
+
+    def seed_preset(self, primitive: str, knobs: dict,
+                    source: str = "preset") -> None:
+        """Wildcard fallback entry from a named preset — serves any
+        dtype/size-class of ``primitive`` until a measured exact key shadows
+        it. ``backend=None``: presets carry knobs, not a backend verdict."""
+        self.entries[wildcard_key(primitive)] = {
+            "backend": None, "knobs": dict(knobs), "t_us": None,
+            "t_default_us": None, "speedup": None, "source": source,
+        }
+
+    def __len__(self) -> int:
+        return len(self.entries)

@@ -1,0 +1,397 @@
+"""Measurement-driven knob search over the registry's legal tunable space.
+
+Per ``(primitive, dtype, size-class)`` key the engine
+
+1. **enumerates** the primitive's legal knob space — block geometry and (for
+   the sort family) the hyper-block order — and filters every candidate
+   through the SAME ``_validate_tuning`` the registry applies to user
+   overrides, so the search can never propose a knob set a caller couldn't
+   set by hand;
+2. **prunes** with the analytic models from ``benchmarks/cost.py``:
+   modelled HBM bytes per candidate (padded blocks, payload lanes) and the
+   closed-form launch counts (``sort_kernel.cross_launches`` /
+   ``merge_kernel.merge_launches``) rank the candidates, a VMEM ceiling
+   drops hyper-block geometries that cannot fit, and only the top few
+   survivors get timed;
+3. **measures** the survivors through the registry's cached-jit call path —
+   warm-up call discarded, median of k repeats — on BOTH backends, and
+   records the winner (backend + non-default knobs) in a
+   :class:`repro.tune.cache.TuneCache`.
+
+Deterministic CI mode: pass ``measure=model_measure`` and step 3 evaluates
+the cost model instead of the wall clock — same ranking logic, zero
+execution, identical output on every machine. CI uses this exclusively;
+interpret-mode wall-clock on a CPU container must never populate a cache
+(the fingerprint additionally guards the read side — see tune/cache.py).
+"""
+from __future__ import annotations
+
+import math
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from repro.kernels import common as KC
+from repro.kernels import merge_kernel as MK
+from repro.kernels import sort_kernel as SK
+from repro.tune import cache as tcache
+
+try:  # repo checkout: the single source of the model constants
+    from benchmarks import cost as _cost
+except ImportError:  # installed as a package without the benchmarks tree
+    _cost = None
+
+if _cost is not None:
+    LAUNCH_S = _cost.LAUNCH
+    HBM_BYTES_S = _cost.HBM
+    JNP_SORT_BW = _cost.JNP_SORT_BW
+    pallas_model_time = _cost.pallas_model_time
+    jnp_model_time = _cost.jnp_model_time
+else:  # pragma: no cover - same numbers, local fallback
+    LAUNCH_S, HBM_BYTES_S = 20e-6, 819e9
+    JNP_SORT_BW = 0.05 * HBM_BYTES_S
+
+    def pallas_model_time(hbm_bytes, launches):
+        return launches * LAUNCH_S + hbm_bytes / HBM_BYTES_S
+
+    def jnp_model_time(n_bytes, passes, bw=0.5 * 819e9):
+        return 2e-6 + passes * n_bytes / bw
+
+
+# Primitives the driver sweeps: the paper's registered suite plus the
+# batched sort family and the §2b merges. bincount has no Pallas impl and
+# no knobs — nothing to tune.
+STREAM_PRIMITIVES = (
+    "map", "mapreduce", "accumulate", "searchsorted", "minmax_histogram",
+)
+SORT_PRIMITIVES = ("sort", "sort_kv", "argsort")
+BATCHED_PRIMITIVES = ("sort_batched", "argsort_batched", "topk")
+MERGE_PRIMITIVES = ("merge", "merge_kv")
+TUNED_PRIMITIVES = (
+    STREAM_PRIMITIVES + SORT_PRIMITIVES + BATCHED_PRIMITIVES
+    + MERGE_PRIMITIVES
+)
+
+#: Primitives whose Pallas path carries a same-size payload lane next to
+#: the keys (values / indices): twice the modelled HBM traffic.
+_PAYLOAD = (
+    "sort_kv", "argsort", "merge_kv", "argsort_batched", "topk",
+)
+
+#: Merge geometry the model assumes (the distributed finish's run count).
+MERGE_RUNS = 8
+
+#: Rows the batched primitives are measured over (the grid folds the batch
+#: in, so a small batch keeps measurement cheap without changing the
+#: per-row crossover the size-class records).
+BATCH_ROWS = 4
+
+#: VMEM ceiling for hyper-block candidates: 2^m blocks x itemsize, doubled
+#: for a payload lane and again for double buffering, must fit comfortably.
+VMEM_BUDGET_BYTES = 12 * 2**20
+
+DEFAULT_SIZES = (2**12, 2**14, 2**17, 2**20)
+DEFAULT_DTYPES = ("float32",)
+
+#: Candidate grids (filtered through the registry's own validation below).
+_ROWS_GRID = (8, 16, 32)
+_COLS_GRID = (128, 256, 512, 1024, 2048)
+_HYPER_GRID = (0, 1, 2, 3, 4)
+
+
+def supports_dtype(name: str, dtype) -> bool:
+    if name == "minmax_histogram":  # bin edges are float arithmetic
+        return jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+    return True
+
+
+def candidates(name: str) -> list[dict]:
+    """Legal knob sets for ``name``: the default geometry plus every grid
+    point the registry's ``_validate_tuning`` accepts (pow2 checks, sort
+    family constraints, per-primitive allowed keys)."""
+    prim = registry.get(name)
+    if prim.pallas_impl is None or not prim.tunables:
+        return [{}]
+    hyper_grid = (
+        _HYPER_GRID if "sort_hyper" in prim.tunables else (None,)
+    )
+    out = [{}]  # default geometry is always in the pool
+    for br in _ROWS_GRID:
+        for bc in _COLS_GRID:
+            for m in hyper_grid:
+                kv = {"block_rows": br, "block_cols": bc}
+                if m is not None:
+                    kv["sort_hyper"] = m
+                try:
+                    registry._validate_tuning(name, kv, prim.tunables)
+                except (KeyError, ValueError):
+                    continue
+                out.append(kv)
+    return out
+
+
+def _geometry(name: str, knobs: dict, itemsize: int):
+    br = knobs.get("block_rows") or KC.BLOCK_ROWS
+    bc = knobs.get("block_cols") or KC.BLOCK_COLS
+    block = br * bc
+    m = knobs.get("sort_hyper")
+    m = SK.HYPER_ORDER if m is None else m
+    vmem = (2 ** m) * block * itemsize * 4  # payload + double buffering
+    return block, m, vmem
+
+
+def modelled_time(name: str, backend: str, n: int, itemsize: int,
+                  knobs: dict) -> float:
+    """Analytic seconds for one call (constants from benchmarks/cost.py):
+    Pallas = closed-form launches x launch latency + modelled HBM bytes at
+    the streamed rate; portable = dispatch overhead + algorithmic passes at
+    the unfused lowering's effective bandwidth. Returns ``inf`` for
+    candidates past the VMEM budget — the pruning rule."""
+    n = max(int(n), 1)
+    nb = n * itemsize
+    sortish = name in registry._SORT_FAMILY
+    if backend == "jnp":
+        if sortish:
+            passes = max(math.log2(n), 1.0)
+            return jnp_model_time(nb, passes, bw=JNP_SORT_BW)
+        return jnp_model_time(nb, passes=2.0)
+    block, m, vmem = _geometry(name, knobs, itemsize)
+    if sortish:
+        if vmem > VMEM_BUDGET_BYTES:
+            return float("inf")
+        total = max(KC.next_pow2(n), block)
+        if name in MERGE_PRIMITIVES:
+            launches = max(
+                MK.merge_launches(total, MERGE_RUNS, hyper=m, block=block), 1
+            )
+        else:
+            launches = SK.cross_launches(n, hyper=m, block=block)
+        hbm = 2 * total * itemsize * launches
+        if name in _PAYLOAD:
+            hbm *= 2
+        return pallas_model_time(hbm, launches)
+    padded = KC.round_up(n, block)
+    hbm = 2 * padded * itemsize
+    if name in _PAYLOAD:
+        hbm *= 2
+    return pallas_model_time(hbm, 1)
+
+
+# -- representative operands -------------------------------------------------
+# Module-level statics: stable function identity -> one registry cache key
+# per (primitive, backend, knobs) across the whole search.
+
+def _double(a):
+    return a + a
+
+
+def _plus(a, b):
+    return a + b
+
+
+def _host_zero(dtype):
+    return 0.0 if jnp.issubdtype(jnp.dtype(dtype), jnp.floating) else 0
+
+
+def make_operands(name: str, n: int, dtype) -> tuple[tuple, dict]:
+    """Representative (operands, static opts) for one timed call of
+    ``name`` at size-class anchor ``n`` (last-axis length for the batched
+    primitives). Deterministic: seeded host RNG."""
+    dt = jnp.dtype(dtype)
+    rng = np.random.default_rng(0)
+    if jnp.issubdtype(dt, jnp.floating):
+        host = rng.standard_normal(n).astype(dt)
+    else:
+        host = rng.integers(-(2**20), 2**20, size=n).astype(dt)
+    x = jnp.asarray(host)
+    if name == "map":
+        return (x,), {"f": _double}
+    if name == "mapreduce":
+        return (x,), {"f": _double, "op": _plus, "init": _host_zero(dt)}
+    if name == "accumulate":
+        return (x,), {"op": _plus, "init": _host_zero(dt)}
+    if name in ("sort", "argsort"):
+        return (x,), {}
+    if name == "sort_kv":
+        return (x, jnp.arange(n, dtype=jnp.int32)), {}
+    if name in ("sort_batched", "argsort_batched", "topk"):
+        xb = jnp.asarray(
+            np.stack([np.roll(host, i) for i in range(BATCH_ROWS)])
+        )
+        return (xb,), ({"k": min(8, n)} if name == "topk" else {})
+    if name == "searchsorted":
+        hay = jnp.sort(x)
+        q = x[: max(n // 4, 1)]
+        return (hay, q), {"side": "left"}
+    if name == "minmax_histogram":
+        return (x, jnp.asarray(-4.0, dt), jnp.asarray(4.0, dt)), {
+            "nbins": 64
+        }
+    if name in ("merge", "merge_kv"):
+        runs = max(n // MERGE_RUNS, 1)
+        k2 = jnp.sort(
+            jnp.asarray(host[: runs * MERGE_RUNS]).reshape(MERGE_RUNS, runs),
+            axis=-1,
+        ).reshape(-1)
+        if name == "merge":
+            return (k2,), {"nruns": MERGE_RUNS}
+        v = jnp.arange(k2.shape[0], dtype=jnp.int32)
+        return (k2, v), {"nruns": MERGE_RUNS}
+    raise KeyError(f"no operand recipe for primitive {name!r}")
+
+
+# -- measurement -------------------------------------------------------------
+
+def model_measure(name: str, backend: str, operands: tuple, opts: dict,
+                  knobs: dict) -> float:
+    """Deterministic measure: evaluates the cost model, executes nothing.
+    The CI/tests injection point — a tune pass with this measure yields the
+    same cache bytes on every machine."""
+    prim = registry.get(name)
+    x = operands[0]
+    n = x.shape[-1] if prim.switch_measure == "last_axis" else x.size
+    return modelled_time(name, backend, n, jnp.dtype(x.dtype).itemsize,
+                         knobs)
+
+
+def wallclock_measure(name: str, backend: str, operands: tuple, opts: dict,
+                      knobs: dict, *, repeats: int = 5) -> float:
+    """Median-of-k wall clock through the registry's cached-jit path; the
+    first call (trace + compile + warm-up) is discarded."""
+    prim = registry.get(name)
+
+    def once():
+        with registry.tuning.overrides({name: knobs} if knobs else {}):
+            return jax.block_until_ready(
+                prim(*operands, backend=backend, **opts)
+            )
+
+    once()  # warm-up, discarded
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        once()
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
+
+
+# -- the search --------------------------------------------------------------
+
+def search_one(name: str, n: int, dtype, *, measure=None,
+               prune_to: int = 4) -> dict:
+    """Best (backend, knobs) for one (primitive, dtype, size-class) key.
+
+    Returns the cache-entry payload: chosen backend + non-default knobs,
+    the winning time, and the un-tuned baseline time (what ``auto``
+    resolution without a cache would have run: ``dispatch.resolve(None)``
+    at default knobs) for the tuned-vs-default report."""
+    measure = measure or wallclock_measure
+    prim = registry.get(name)
+    operands, opts = make_operands(name, n, dtype)
+    itemsize = jnp.dtype(dtype).itemsize
+
+    best = ("jnp", {}, measure(name, "jnp", operands, opts, {}))
+    t_by_backend = {"jnp": best[2]}
+    if prim.pallas_impl is not None:
+        pool = candidates(name)
+        pool.sort(
+            key=lambda kv: modelled_time(name, "pallas", n, itemsize, kv)
+        )
+        survivors = pool[:prune_to]
+        if {} not in survivors:  # keep the default geometry comparable
+            survivors.append({})
+        for kv in survivors:
+            if modelled_time(name, "pallas", n, itemsize, kv) == float(
+                "inf"
+            ):
+                continue  # pruned: past the VMEM budget
+            t = measure(name, "pallas", operands, opts, kv)
+            if kv == {}:
+                t_by_backend["pallas_default"] = t
+            if t < best[2]:
+                best = ("pallas", kv, t)
+
+    default_backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    t_default = t_by_backend.get(
+        "pallas_default" if default_backend == "pallas" else "jnp",
+        best[2],
+    )
+    backend_pick, knobs, t_best = best
+    return {
+        "backend": backend_pick,
+        "knobs": knobs,
+        "t_us": t_best * 1e6,
+        "t_default_us": t_default * 1e6,
+    }
+
+
+def tune_all(sizes=DEFAULT_SIZES, dtypes=DEFAULT_DTYPES, primitives=None,
+             *, measure=None, cache=None, path=None, seed_presets=True,
+             prune_to: int = 4) -> tcache.TuneCache:
+    """Sweep ``primitives`` (default: the full tuned suite) across the
+    size/dtype grid into a :class:`TuneCache`. Named presets (the serve
+    sampler / MoE routing profiles) seed wildcard entries first, so
+    un-measured keys keep the hand-rolled numbers; every measured key
+    shadows its wildcard."""
+    cache = cache or tcache.TuneCache(path=path)
+    source = "model" if measure is model_measure else (
+        "wallclock" if measure is None or measure is wallclock_measure
+        else "custom"
+    )
+    if seed_presets:
+        # knob-level merge across presets; where two presets disagree on a
+        # knob (e.g. sampler vs moe_routing switch_below for topk) NEITHER
+        # value is seeded — a wildcard cache entry outranks every preset
+        # scope, so seeding one preset's number would silently govern the
+        # other preset's callers. Conflicts stay with the scoped presets
+        # (or a measured exact key, which shadows the wildcard anyway).
+        merged: dict[str, dict] = {}
+        conflicted: dict[str, set] = {}
+        for pname in registry.tuning.preset_names():
+            for prim_name, kv in registry.tuning.preset_mapping(
+                pname
+            ).items():
+                tgt = merged.setdefault(prim_name, {})
+                for k, v in kv.items():
+                    if k in tgt and tgt[k] != v:
+                        conflicted.setdefault(prim_name, set()).add(k)
+                    else:
+                        tgt[k] = v
+        for prim_name, kv in merged.items():
+            kv = {k: v for k, v in kv.items()
+                  if k not in conflicted.get(prim_name, ())}
+            if kv:
+                cache.seed_preset(prim_name, kv)
+    for name in (primitives if primitives is not None else TUNED_PRIMITIVES):
+        for dtype in dtypes:
+            if not supports_dtype(name, dtype):
+                continue
+            for n in sizes:
+                res = search_one(
+                    name, n, dtype, measure=measure, prune_to=prune_to
+                )
+                cache.put(
+                    name, dtype, KC.size_class(n), source=source, **res
+                )
+    return cache
+
+
+def report_lines(cache: tcache.TuneCache) -> list[str]:
+    """Human-readable chosen-vs-default table for the driver."""
+    lines = [
+        f"{'key':<34} {'backend':<8} {'speedup':>8}  knobs (non-default)",
+    ]
+    for key in sorted(cache.entries):
+        e = cache.entries[key]
+        knobs = e.get("knobs") or {}
+        kn = ", ".join(f"{k}={v}" for k, v in sorted(knobs.items()))
+        sp = e.get("speedup")
+        lines.append(
+            f"{key:<34} {str(e.get('backend')):<8} "
+            f"{(f'{sp:.2f}x' if sp else '-'):>8}  {kn or '(defaults)'}"
+        )
+    return lines
