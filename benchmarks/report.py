@@ -206,6 +206,42 @@ def roofline_table(recs, dr_recs=None):
     return "\n".join(lines), rows
 
 
+def serving_table(json_path=None):
+    """Serving trajectory (BENCH_serve.json): tok/s, fused-vs-unfused
+    sampler launches per decode step, and slot utilisation per recorded
+    entry. Missing/invalid files degrade to a hint line, never an error."""
+    path = json_path or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_serve.json",
+    )
+    if not os.path.exists(path):
+        return (f"(no serving trajectory at {path}; populate with "
+                f"`PYTHONPATH=src python -m benchmarks.serving`)")
+    lines = [
+        "| arch | req/slots | tokens (EOS-aware / naive) | steps | "
+        "launches/step fused vs unfused | slot util | tok/s (wallclock) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    try:
+        with open(path) as f:
+            entries = json.load(f)["entries"]
+        for e in entries:
+            sl = e.get("sampler_launches", {})
+            wc = e.get("wallclock", {})
+            lines.append(
+                f"| {e.get('arch')} | {e.get('requests')}/{e.get('slots')} "
+                f"| {e.get('tokens_eos_aware')} / {e.get('tokens_naive')} | "
+                f"{e.get('decode_steps')} | "
+                f"{sl.get('fused')} vs {sl.get('unfused')} | "
+                f"{e.get('mean_slot_util')} | {wc.get('tok_s', '-')} |"
+            )
+    except (OSError, json.JSONDecodeError, KeyError, TypeError,
+            AttributeError) as e:
+        # hand-edited/corrupt trajectory: degrade, never crash the report
+        return f"(serving trajectory at {path} unreadable: {e})"
+    return "\n".join(lines)
+
+
 def tuned_vs_default_table(cache_path=None):
     """Per-primitive modelled speedup of the autotuned knobs over the
     default resolution, read from the repro.tune cache — makes the perf
@@ -253,6 +289,9 @@ def main():
     ap.add_argument("--autotune-cache", default=None,
                     help="repro.tune cache JSON (default: the tune "
                          "subsystem's default path)")
+    ap.add_argument("--serve-json", default=None,
+                    help="serving trajectory JSON (default: the repo's "
+                         "BENCH_serve.json)")
     ap.add_argument("--out", default="results/report.md")
     args = ap.parse_args()
 
@@ -268,6 +307,8 @@ def main():
         with open(os.path.join(args.roofline_dir, "summary.json"),
                   "w") as f:
             json.dump(rows, f, indent=1, default=float)
+    parts += ["\n\n## Serving (continuous-batching engine)\n",
+              serving_table(args.serve_json)]
     parts += ["\n\n## Tuned vs default (autotune cache)\n",
               tuned_vs_default_table(args.autotune_cache)]
     text = "".join(parts)

@@ -198,6 +198,8 @@ def main(argv=None) -> None:
         return
 
     if args.quick:
+        from benchmarks import serving
+
         _emit(dispatch_overhead.run(n=16_384, iters=10))
         # smaller n keeps CI wall-time sane; the gate ratio is asserted at
         # every size, the checked-in BENCH_sort.json records the full 2^20
@@ -208,14 +210,19 @@ def main(argv=None) -> None:
         # autotune smoke: deterministic model measure, appends the
         # BENCH_autotune.json trajectory entry
         _emit(autotune_rows())
+        # serving gate: fused-sampler launch count + EOS accounting +
+        # slot-refill completion; appends the BENCH_serve.json entry
+        # (skipped when its deterministic part matches the last one)
+        _emit(serving.run())
         return
 
-    from benchmarks import arithmetic, cost, scaling, throughput
+    from benchmarks import arithmetic, cost, scaling, serving, throughput
 
     _emit(arithmetic.run(n=1_000_000))
     _emit(dispatch_overhead.run())
     _emit(sort_throughput.run())
     _emit(sort_throughput.run_distributed())
+    _emit(serving.run())
     _emit(scaling.run("weak", n_per_rank=32_768, devcounts=(1, 2, 4, 8)))
     _emit(scaling.run("strong", total=262_144, devcounts=(1, 2, 4, 8)))
     _emit(throughput.run(devcounts=(4,), sizes=(16_384, 65_536)))

@@ -1,0 +1,186 @@
+"""Serving-throughput gate: the continuous-batching engine end to end.
+
+Asserted here (and re-run by the CI ``serve-smoke`` + ``bench-smoke`` jobs):
+
+  * **launch gate** — the fused ``nucleus_mask`` sampler issues STRICTLY
+    fewer Pallas launches per decode step than the historical unfused
+    composition (sortperm + vmapped scan + vmapped search). Counted, not
+    estimated: trace-time ``pallas_call`` counting through
+    ``kernels.common.launch_count`` under ``jax.eval_shape`` — the sort
+    gate's idiom applied to the sampler.
+  * **EOS accounting gate** — the engine's token count equals the sum of
+    per-request emitted tokens and stays strictly below the naive
+    ``requests x max_new`` whenever a request retires early on EOS (the
+    old ``ServeStats.tokens = B * max_new`` overcount is structurally
+    impossible now).
+  * **completion gate** — more requests than slots all complete, in
+    admission order, with finite latencies.
+
+The engine run itself is greedy (temperature 0) on a smoke config so every
+number below is deterministic across machines; wall-clock tok/s is recorded
+as informational only. A trajectory entry goes to ``BENCH_serve.json`` via
+the shared ``append_json`` — skipped when the deterministic part is
+identical to the last recorded entry, exactly like the other trajectories.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO, "BENCH_serve.json")
+
+#: Synthetic sampler geometry for launch counting (trace-only, so the row
+#: length can be serving-realistic even though the engine run below uses a
+#: smoke vocab): 4 slots over 4k-token rows.
+COUNT_B = 4
+COUNT_V = 4096
+
+
+def count_sampler_launches(*, fused: bool, b: int = COUNT_B,
+                           v: int = COUNT_V, top_k: int = 8,
+                           top_p: float = 0.9) -> int:
+    """Trace-time Pallas launch count of ONE decode-step sampling pass."""
+    from repro.core import dispatch, registry
+    from repro.kernels import common as KC
+    from repro.launch.serve import sample_logits
+
+    registry.clear_caches()   # fresh jitted wrappers: the trace re-runs
+    keys = jax.ShapeDtypeStruct((b, 2), jnp.uint32)
+    lg = jax.ShapeDtypeStruct((b, v), jnp.float32)
+    with dispatch.backend("pallas"):
+        KC.reset_launch_count()
+        # fresh lambda per count: eval_shape caches on function identity
+        jax.eval_shape(
+            lambda k, l: sample_logits(k, l, top_k=top_k, top_p=top_p,
+                                       fused=fused),
+            keys, lg,
+        )
+        return KC.launch_count()
+
+
+def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
+        prompt_len: int = 5, max_new: int = 6,
+        json_path: str | None = BENCH_JSON):
+    """Returns benchmark rows [(name, us, derived), ...]; asserts the
+    gates. Deterministic apart from the informational wall-clock fields."""
+    from repro.configs import load_smoke_config
+    from repro.launch.engine import Engine, Request
+    from repro.models import model as M
+
+    fused = count_sampler_launches(fused=True)
+    unfused = count_sampler_launches(fused=False)
+    # GATE: the fused nucleus sampler launches strictly fewer kernels
+    assert fused < unfused, (fused, unfused)
+
+    cfg = load_smoke_config(arch)
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(rng, cfg)
+    prompts = np.asarray(
+        jax.random.randint(rng, (requests, prompt_len), 0, cfg.vocab)
+    )
+    cache_len = prompt_len + max_new
+
+    def engine(eos):
+        return Engine(params, cfg, slots=slots, cache_len=cache_len,
+                      prompt_pad=prompt_len, temperature=0.0, eos_id=eos)
+
+    def reqs():
+        return [Request(rid=i, prompt=prompts[i], max_new=max_new)
+                for i in range(requests)]
+
+    # probe pass picks an EOS id the greedy engine actually emits early,
+    # so the EOS-accounting gate always has a mid-stream retirement to
+    # check (still deterministic: the probe is greedy too, and per-request
+    # determinism means request 0 alone predicts its tokens in the full
+    # run — no need to decode all requests twice)
+    probe, _ = engine(None).run(reqs()[:1])
+    eos = probe[0].tokens[min(2, len(probe[0].tokens) - 1)]
+
+    t0 = time.perf_counter()
+    results, stats = engine(eos).run(reqs())
+    wall_s = time.perf_counter() - t0
+
+    # GATE: every request completed, in-order, with finite latency
+    assert sorted(results) == list(range(requests))
+    assert all(r.finished_step >= 0 and r.latency_steps >= 0
+               for r in results.values())
+    # GATE: EOS-aware accounting — token count equals what requests got,
+    # and at least one request retired early (strictly below the naive
+    # fixed-batch overcount)
+    per_request = sum(len(r.tokens) for r in results.values())
+    assert stats.tokens == per_request, (stats.tokens, per_request)
+    assert stats.tokens < requests * max_new, stats.tokens
+    assert any(r.tokens[-1] == eos for r in results.values())
+
+    tok_s = stats.tokens_per_s
+    entry = {
+        "entry": "serving",
+        "arch": arch,
+        "slots": slots,
+        "requests": requests,
+        "prompt_len": prompt_len,
+        "max_new": max_new,
+        "eos_id": int(eos),
+        "tokens_eos_aware": int(stats.tokens),
+        "tokens_naive": requests * max_new,
+        "decode_steps": int(stats.steps),
+        "prefills": int(stats.prefills),
+        "slot_util": [round(u, 4) for u in stats.slot_util],
+        "mean_slot_util": round(stats.mean_slot_util, 4),
+        "sampler_launches": {"fused": fused, "unfused": unfused,
+                             "b": COUNT_B, "v": COUNT_V},
+        # informational only — excluded from the skip-if-identical compare
+        "wallclock": {
+            "tok_s": round(tok_s, 2),
+            "prefill_s": round(stats.prefill_s, 4),
+            "decode_s": round(stats.decode_s, 4),
+            "total_s": round(wall_s, 4),
+        },
+    }
+    if json_path:
+        _append_if_new(json_path, entry)
+
+    return [
+        (
+            "serve.launches",
+            0.0,
+            f"fused={fused} unfused={unfused} per decode step "
+            f"(B={COUNT_B}, V={COUNT_V}): PASS",
+        ),
+        (
+            "serve.engine",
+            stats.decode_s / max(stats.tokens, 1) * 1e6,
+            f"{requests}req/{slots}slots tokens={stats.tokens} "
+            f"(naive {requests * max_new}) steps={stats.steps} "
+            f"util={stats.mean_slot_util:.2f} tok/s={tok_s:.1f}(wallclock)",
+        ),
+    ]
+
+
+def _append_if_new(path: str, entry: dict) -> None:
+    """Append via the shared trajectory idiom, skipping when the
+    DETERMINISTIC part matches the last entry (wall-clock differs every
+    run and carries no trajectory information)."""
+    from benchmarks.sort_throughput import append_json
+
+    def det(e):
+        return {k: v for k, v in e.items() if k != "wallclock"}
+
+    try:
+        with open(path) as f:
+            last = json.load(f)["entries"][-1]
+    except (OSError, json.JSONDecodeError, KeyError, IndexError, TypeError):
+        last = None
+    if last is None or det(entry) != det(last):
+        append_json(path, entry)
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -25,6 +25,7 @@ from repro.core.sort import (
     merge_sort,
     merge_sort_batched,
     merge_sort_by_key,
+    nucleus_mask,
     sortperm,
     sortperm_batched,
     sortperm_lowmem,
@@ -46,7 +47,8 @@ __all__ = [
     "accumulate", "all_pred", "any_pred", "foreachindex", "map_elements",
     "mapreduce", "reduce",
     "merge", "merge_kv",
-    "merge_sort", "merge_sort_batched", "merge_sort_by_key", "sortperm",
+    "merge_sort", "merge_sort_batched", "merge_sort_by_key", "nucleus_mask",
+    "sortperm",
     "sortperm_batched", "sortperm_lowmem", "topk",
     "searchsortedfirst", "searchsortedlast",
     "bincount", "minmax_histogram",

@@ -55,7 +55,8 @@ import numpy as np
 from repro.core import dispatch
 from repro.kernels import common as KC
 from repro.kernels import hist_kernel, map_kernel, reduce_kernel, scan_kernel
-from repro.kernels import merge_kernel, search_kernel, sort_kernel
+from repro.kernels import merge_kernel, nucleus_kernel, search_kernel
+from repro.kernels import sort_kernel
 from repro.kernels import ref as kref
 
 
@@ -92,7 +93,7 @@ _COMMON_DEFAULTS = {
 #: block_rows gets the extra pow2 check on top of the sublane multiple.
 _SORT_FAMILY = (
     "sort", "sort_kv", "argsort", "sort_batched", "argsort_batched", "topk",
-    "merge", "merge_kv",
+    "merge", "merge_kv", "nucleus_mask",
 )
 
 
@@ -779,6 +780,22 @@ topk_p = register(Primitive(
     "topk", _jnp_topk, _pallas_topk,
     tunables=_SORT_TUNABLES, switch_measure="last_axis",
     doc="last-axis top-k values+indices, descending (sort-derived on TPU)",
+))
+
+
+def _jnp_nucleus_mask(x, *, top_p):
+    return nucleus_kernel.nucleus_mask_ref(x, top_p=top_p)
+
+
+def _pallas_nucleus_mask(x, *, top_p):
+    return nucleus_kernel.nucleus_mask_blocks(x, top_p=top_p)
+
+
+nucleus_mask_p = register(Primitive(
+    "nucleus_mask", _jnp_nucleus_mask, _pallas_nucleus_mask,
+    tunables=_SORT_TUNABLES, switch_measure="last_axis",
+    doc="fused top-p keep mask: descending sortperm + softmax prefix sum "
+        "+ cut + keep scatter in one registry call (serve sampler hot path)",
 ))
 
 

@@ -26,6 +26,7 @@ _argsort = registry.get("argsort")
 _sort_batched = registry.get("sort_batched")
 _argsort_batched = registry.get("argsort_batched")
 _topk = registry.get("topk")
+_nucleus_mask = registry.get("nucleus_mask")
 
 
 def merge_sort(x, *, descending: bool = False, backend: str | None = None):
@@ -126,6 +127,21 @@ def merge_kv(keys, vals, nruns: int, *, counts=None,
                          backend=backend)
     return _merge_kv(keys, vals, counts, nruns=nruns, tie_break=tie_break,
                      backend=backend)
+
+
+def nucleus_mask(x, *, top_p: float, backend: str | None = None):
+    """Fused nucleus (top-p) keep mask along the last axis of logits.
+
+    Keeps the smallest descending-probability prefix whose inclusive
+    softmax mass reaches ``top_p`` (ties at the cut break by ascending
+    index). One registry call replacing the historical sampler composition
+    (descending ``sortperm_batched`` + vmapped ``accumulate`` + vmapped
+    ``searchsortedfirst`` + scatter): the portable path is the XLA oracle,
+    the Pallas path re-enters the batched bitonic network and finishes with
+    a single fused softmax/prefix-sum/cut/scatter launch
+    (kernels/nucleus_kernel.py). ``top_p`` is static (host float).
+    """
+    return _nucleus_mask(x, top_p=float(top_p), backend=backend)
 
 
 def topk(x, k: int, *, backend: str | None = None):

@@ -98,7 +98,7 @@ def flash_attention(q, k, v, *, causal=True):
         v = jnp.pad(v, ((0, 0), (0, sk_p - Sk), (0, 0)))
 
     grid = (BH, sq_p // BQ, sk_p // BK)
-    out = pl.pallas_call(
+    out = C.pallas_call(
         functools.partial(_flash_body, scale, causal, Sk),
         grid=grid,
         in_specs=[

@@ -15,11 +15,22 @@ import threading
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 # TPU vector-register geometry (v4/v5): 8 sublanes x 128 lanes.
 SUBLANES = 8
 LANES = 128
 TILE = SUBLANES * LANES  # 1024 elements: the minimum well-shaped f32 tile.
+
+# The ONE vocab-masking constant (loss padded-vocab mask, sampler top-k /
+# top-p / vocab cuts). Finite on purpose: ``-inf`` makes an all-masked row
+# produce ``inf - inf = nan`` in log-sum-exp/softmax reductions and kills
+# gradients through ``where``; ``-1e30`` underflows to exactly 0 probability
+# after ``exp(x - max)`` for any realistic max, so the two behave identically
+# on live rows while the finite value stays total-order-sortable and
+# nan-free. models/model.py (loss) and launch/serve.py (sampler) used to
+# disagree (-1e30 vs -inf); both now read this.
+NEG_MASK = -1e30
 
 # Default block used by the 1-D streaming kernels (map/reduce/scan/hist):
 # (8, 1024) f32 = 32 KiB per operand — small against ~16 MiB VMEM, so
@@ -89,6 +100,39 @@ def tuning_scope(*, interpret=None, block_rows=None, block_cols=None,
     finally:
         (_tuning.interpret, _tuning.block_rows, _tuning.block_cols,
          _tuning.sort_hyper) = prev
+
+
+# --------------------------------------------------------------------------
+# Trace-time launch counter — package-wide.
+#
+# Incremented once per ``pl.pallas_call`` ANY kernel in this package issues,
+# i.e. once per kernel launch of a single execution of the traced program.
+# Benchmarks read it under ``jax.eval_shape`` to *count* (not estimate)
+# launches: the sort gate (benchmarks/sort_throughput.py) counts the fused
+# network's launches, the serving gate (benchmarks/serving.py) counts
+# launches per decode step for the fused vs unfused sampler. Kernels issue
+# launches through ``pallas_call`` below; ``sort_kernel`` re-exports the
+# counter so existing callers keep working.
+# --------------------------------------------------------------------------
+
+_launches = 0
+
+
+def launch_count() -> int:
+    return _launches
+
+
+def reset_launch_count() -> None:
+    global _launches
+    _launches = 0
+
+
+def pallas_call(*args, **kwargs):
+    """Counted ``pl.pallas_call`` — every kernel in this package launches
+    through here so trace-time launch counting covers the whole suite."""
+    global _launches
+    _launches += 1
+    return pl.pallas_call(*args, **kwargs)
 
 
 def ceil_div(a: int, b: int) -> int:

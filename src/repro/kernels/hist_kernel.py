@@ -81,7 +81,7 @@ def minmax_histogram_blocks(
     lo = jnp.asarray(lo, jnp.float32).reshape(1, 1)
     hi = jnp.asarray(hi, jnp.float32).reshape(1, 1)
 
-    hist, mn, mx = pl.pallas_call(
+    hist, mn, mx = C.pallas_call(
         functools.partial(_hist_body, nbins, n),
         grid=grid,
         in_specs=[

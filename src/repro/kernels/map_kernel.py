@@ -44,7 +44,7 @@ def map_blocks(f, *arrays: jax.Array, out_dtype=None) -> jax.Array:
     grid = (rows // br,)
     spec = pl.BlockSpec((br, bc), lambda i: (i, 0))
 
-    out = pl.pallas_call(
+    out = C.pallas_call(
         functools.partial(_map_body, f, len(views)),
         grid=grid,
         in_specs=[spec] * len(views),

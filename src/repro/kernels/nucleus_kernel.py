@@ -1,0 +1,135 @@
+"""Fused nucleus (top-p) keep-mask kernel — the serve sampler's hot path.
+
+The unfused AK composition the serve loop shipped with costs, per decode
+step: a batched descending sortperm (the bitonic network), a vmapped
+per-row inclusive prefix sum (``accumulate``), a vmapped ``searchsorted``
+for the cut index, and an XLA scatter for the keep mask — ~5 registry
+dispatches and 2 extra kernel launches after the network. This module fuses
+everything after the sort into ONE Pallas launch: softmax over the
+descending row, inclusive prefix sum, top-p cut, and the keep-mask scatter
+back through the permutation, all on the (rows, vocab) block resident in
+VMEM.
+
+Both implementations (the portable oracle and the Pallas path) funnel the
+sorted rows through the SAME ``_mask_from_sorted`` expression so their
+masks agree bit-for-bit wherever the two sorts agree — and the sorts agree
+everywhere because ``-0.0`` is canonicalised to ``+0.0`` up front (the one
+place IEEE ``<`` and XLA's total order rank keys differently; NaN logits
+are unsupported, as in every sampler).
+
+Semantics (matching the historical unfused composition exactly): tokens are
+ranked by (logit desc, index asc); the mask keeps ranks ``0..cut`` where
+``cut`` is the first rank whose inclusive cumulative softmax mass reaches
+``top_p``. ``top_p`` small enough keeps exactly the argmax token; ties at
+the cut resolve by ascending index (stable).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common as C
+from repro.kernels import sort_kernel as SK
+
+
+def _canon(lg):
+    """f32 view with -0.0 folded into +0.0 (x + 0.0 is exact elsewhere), so
+    the bitonic network's ``<`` and XLA's total-order sort rank identically.
+    """
+    return lg.astype(jnp.float32) + 0.0
+
+
+def _mask_from_sorted(s, perm, *, top_p, n_valid):
+    """Keep mask from descending-sorted rows.
+
+    s: (R, Vp) f32, rows sorted descending, padding = -inf;
+    perm: (R, Vp) i32 original column of each sorted slot, padding >= n_valid
+    (out-of-range scatter indices drop). Shared verbatim by the jnp oracle
+    and the Pallas kernel body — the equality guarantee lives here.
+    """
+    lane = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = lane < n_valid
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.where(valid, jnp.exp(s - m), 0.0)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    cum = jnp.cumsum(probs, axis=-1)
+    # first rank whose inclusive mass reaches top_p == count of strictly
+    # smaller prefixes (searchsortedfirst over a non-decreasing row)
+    below = valid & (cum < top_p)
+    cut = jnp.sum(below.astype(jnp.int32), axis=-1, keepdims=True)
+    keep_sorted = valid & (lane <= cut)
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    return jnp.zeros(s.shape, jnp.bool_).at[rows, perm].set(
+        keep_sorted, mode="drop"
+    )
+
+
+def _pad_sorted(s, perm, n):
+    """Pad (B, n) sorted rows out to a lane multiple: keys -inf (zero mass,
+    sorts last), perm n (out of range -> scatter drops)."""
+    vp = C.round_up(max(n, C.LANES), C.LANES)
+    if vp == n:
+        return s, perm, vp
+    pad = vp - n
+    s = jnp.pad(s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    perm = jnp.pad(perm, ((0, 0), (0, pad)), constant_values=n)
+    return s, perm, vp
+
+
+def _flatten(lg):
+    n = lg.shape[-1]
+    lead = lg.shape[:-1]
+    return lg.reshape(-1, n), lead, n
+
+
+def nucleus_mask_ref(lg, *, top_p):
+    """Portable oracle: XLA stable argsort + the shared mask expression."""
+    flat, lead, n = _flatten(_canon(lg))
+    order = jnp.argsort(-flat, axis=-1, stable=True).astype(jnp.int32)
+    s = jnp.take_along_axis(flat, order, axis=-1)
+    s, order, _ = _pad_sorted(s, order, n)
+    keep = _mask_from_sorted(s, order, top_p=top_p, n_valid=n)
+    return keep[:, :n].reshape(*lead, n)
+
+
+def _nucleus_body(top_p, n_valid, s_ref, p_ref, o_ref):
+    o_ref[...] = _mask_from_sorted(
+        s_ref[...], p_ref[...], top_p=top_p, n_valid=n_valid
+    )
+
+
+def nucleus_mask_blocks(lg, *, top_p):
+    """Pallas path: batched bitonic sortperm (descending, stable) + ONE
+    fused softmax/prefix-sum/cut/scatter launch over the whole batch."""
+    flat, lead, n = _flatten(_canon(lg))
+
+    def one(row):
+        # sort ascending on the negated row with an index tie-break:
+        # (-lg asc, idx asc) == (lg desc, idx asc) == stable argsort(-lg)
+        idx = jnp.arange(n, dtype=jnp.int32)
+        sk, perm = SK.bitonic_sort_kv(-row, idx, tie_break=True)
+        return -sk, perm
+
+    s, perm = jax.vmap(one)(flat)
+    s, perm, vp = _pad_sorted(s, perm, n)
+
+    br = C.block_rows()
+    b = s.shape[0]
+    bp = C.round_up(max(b, br), br)
+    if bp != b:
+        s = jnp.pad(s, ((0, bp - b), (0, 0)), constant_values=-jnp.inf)
+        perm = jnp.pad(perm, ((0, bp - b), (0, 0)), constant_values=n)
+
+    spec = pl.BlockSpec((br, vp), lambda i: (i, 0))
+    keep = C.pallas_call(
+        functools.partial(_nucleus_body, top_p, n),
+        grid=(bp // br,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bp, vp), jnp.bool_),
+        interpret=C.interpret_mode(),
+    )(s, perm)
+    return keep[:b, :n].reshape(*lead, n)

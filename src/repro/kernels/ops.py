@@ -70,6 +70,12 @@ def topk(x, k):
     return registry.call("topk", x, k=k, switch_below=0, backend="pallas")
 
 
+def nucleus_mask(x, *, top_p):
+    """Fused top-p keep mask along the last axis (serve-sampler hot path)."""
+    return registry.call("nucleus_mask", x, top_p=float(top_p),
+                         switch_below=0, backend="pallas")
+
+
 def searchsorted(hay, queries, *, side="left"):
     return registry.call("searchsorted", hay, queries, side=side,
                          switch_below=0, backend="pallas")

@@ -70,7 +70,7 @@ def reduce_blocks(f, op, *arrays: jax.Array, unit, out_dtype=None) -> jax.Array:
     grid = (rows // br,)
     spec = pl.BlockSpec((br, bc), lambda i: (i, 0))
 
-    out = pl.pallas_call(
+    out = C.pallas_call(
         functools.partial(_reduce_body, f, op, unit, len(views)),
         grid=grid,
         in_specs=[spec] * len(views),

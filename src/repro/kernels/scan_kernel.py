@@ -81,7 +81,7 @@ def scan_blocks(op, x: jax.Array, *, unit, exclusive: bool = False) -> jax.Array
     grid = (rows // br,)
     spec = pl.BlockSpec((br, bc), lambda i: (i, 0))
 
-    out = pl.pallas_call(
+    out = C.pallas_call(
         functools.partial(_scan_body, op, unit, False),
         grid=grid,
         in_specs=[spec],

@@ -78,7 +78,7 @@ def searchsorted_blocks(
 
     br, bc = C.block_rows(), C.block_cols()
     grid = (qview.shape[0], hview.shape[0] // br)
-    out = pl.pallas_call(
+    out = C.pallas_call(
         functools.partial(_search_body, strict, n_hay),
         grid=grid,
         in_specs=[

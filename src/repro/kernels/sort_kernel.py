@@ -65,26 +65,19 @@ SORT_BLOCK = SORT_ROWS * SORT_COLS
 # unfused one-launch-per-stage layout (the benchmark's counted baseline).
 HYPER_ORDER = 3
 
-# Trace-time launch counter: incremented once per ``pl.pallas_call`` this
-# module issues, i.e. once per kernel launch of a single execution of the
-# traced program. ``benchmarks/sort_throughput.py`` reads it under
-# ``jax.eval_shape`` to *count* (not estimate) launches.
-_launches = 0
-
-
-def launch_count() -> int:
-    return _launches
-
-
-def reset_launch_count() -> None:
-    global _launches
-    _launches = 0
+# Trace-time launch counter: incremented once per ``pl.pallas_call``, i.e.
+# once per kernel launch of a single execution of the traced program.
+# ``benchmarks/sort_throughput.py`` reads it under ``jax.eval_shape`` to
+# *count* (not estimate) launches. The counter itself now lives in
+# kernels/common.py and is shared by the whole kernel package (the serving
+# gate counts sampler launches across sort + nucleus kernels); these
+# aliases keep the original read/reset surface.
+launch_count = C.launch_count
+reset_launch_count = C.reset_launch_count
 
 
 def _pallas_call(*args, **kwargs):
-    global _launches
-    _launches += 1
-    return pl.pallas_call(*args, **kwargs)
+    return C.pallas_call(*args, **kwargs)
 
 
 def _geometry() -> tuple[int, int, int]:

@@ -1,0 +1,348 @@
+"""Continuous-batching serving engine: slot scheduler + per-slot decode.
+
+The static-shape (TPU) variant of continuous batching: the decode batch is a
+fixed grid of ``slots`` lanes over ONE shared KV/state cache, and the
+scheduler refills a finished lane in place instead of re-batching —
+shapes never change, so the decode step jits exactly once.
+
+    admit      — pop a queued request and run ``model.slot_prefill`` (a
+                 batch-1 prefill scattered into that slot's row of every
+                 cache leaf; neighbouring lanes untouched bit for bit),
+                 then sample the request's first token from the prefill
+                 logits. Attention families right-pad the prompt to the
+                 engine's fixed ``prompt_pad`` (ONE prefill trace: pad K/V
+                 is overwritten or causally masked — see DESIGN.md §8);
+                 recurrent families (ssm/hybrid) prefill at the TRUE prompt
+                 length instead — a recurrence integrates every input it is
+                 fed, so no mask can hide pad tokens, and the price is one
+                 prefill trace per distinct prompt length (bucket prompts
+                 upstream to bound it).
+    decode     — ONE jitted ``model.decode_step`` over all slots with a
+                 per-slot POSITION VECTOR: each lane RoPEs, writes its cache
+                 column, and attends its own ``[0, pos_b]`` prefix (the
+                 per-slot attention-length mask). Parked lanes sit past the
+                 cache length — their writes drop and nobody reads them.
+    sample     — the AK-primitive sampler (launch/serve.py) under the
+                 "sampler" tuning preset, with PER-REQUEST rng keys
+                 ``fold_in(fold_in(seed, rid), token_index)`` — sampled
+                 tokens depend only on (request, index), never on slot
+                 assignment or batch composition, which is what makes the
+                 engine's output equal a sequential one-request reference.
+    retire     — a lane finishes on EOS or its ``max_new`` budget; stats
+                 count ONLY tokens up to and including EOS (the historical
+                 ``B * max_new`` accounting overcounted dead-lane garbage).
+
+The host loop is double-buffered: the next device step is dispatched BEFORE
+the previous step's tokens are fetched for EOS bookkeeping, so host-side
+scheduling (EOS checks, queue admission, stats) overlaps device execution —
+JAX's async dispatch keeps the device busy while Python catches up. The
+price is that a finished lane is detected one step late and decodes one
+garbage step before refill — emitted outputs are unaffected (the garbage is
+never recorded), utilisation dips by one lane-step. ``overlap=False``
+restores strictly synchronous bookkeeping (used by the equivalence tests).
+
+Every step reports a heartbeat + step time into ``runtime.supervisor``
+(Supervisor.beat / StragglerMonitor.record) — the serving loop joins the
+elasticity layer that so far only train loops fed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from repro.models import model as M
+from repro.runtime.supervisor import StragglerMonitor, Supervisor
+
+#: Families the slot scheduler supports (per-slot positions + slot-indexed
+#: cache refill). encdec/vlm need per-request encoder/vision features wired
+#: through slot_prefill's xkv scatter — they route through the fixed-batch
+#: compat loop in launch/serve.py instead.
+ENGINE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+# Module-level jits (cfg is a hashable frozen dataclass -> a static arg):
+# every Engine instance with the same (cfg, shapes) shares ONE compiled
+# decode step and ONE compiled slot-prefill instead of re-tracing per
+# instance — engines are cheap to construct.
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def _decode_jit(params, tok, caches, pos, *, cfg):
+    return M.decode_step(params, cfg, tok, caches, pos)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "cache_len"),
+                   donate_argnums=(2,))
+def _prefill_jit(params, tok, caches, slot, *, cfg, cache_len):
+    return M.slot_prefill(params, cfg, tok, caches, slot,
+                          cache_len=cache_len)
+
+
+@functools.partial(jax.jit, static_argnames=("seed",))
+def _keys_jit(rids, idxs, *, seed):
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(
+        lambda r, i: jax.random.fold_in(jax.random.fold_in(base, r), i)
+    )(rids, idxs)
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: a prompt and a generation budget."""
+
+    rid: int
+    prompt: np.ndarray          # (len,) int32, 0 < len <= engine prompt_pad
+    max_new: int = 32
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: list                 # generated ids, truncated at EOS (incl.)
+    admitted_step: int           # engine step count at admission
+    finished_step: int = -1
+
+    @property
+    def latency_steps(self) -> int:
+        return self.finished_step - self.admitted_step + 1
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """EOS-aware accounting: ``tokens`` counts exactly the tokens handed
+    back to requests — dead-lane garbage after a sequence's EOS never
+    inflates tok/s (the fix for the old ``B * max_new`` overcount)."""
+
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    steps: int = 0
+    tokens: int = 0
+    prefills: int = 0
+    slot_util: list = dataclasses.field(default_factory=list)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / max(self.decode_s, 1e-9)
+
+    @property
+    def mean_slot_util(self) -> float:
+        return float(np.mean(self.slot_util)) if self.slot_util else 0.0
+
+
+class Engine:
+    """Slot scheduler over a shared static-shape decode cache."""
+
+    def __init__(self, params, cfg, *, slots: int = 4, cache_len: int = 64,
+                 prompt_pad: int = 16, temperature: float = 1.0,
+                 top_k: int = 0, top_p: float = 1.0, seed: int = 0,
+                 eos_id: int | None = None, fused_sampler: bool = True,
+                 overlap: bool = True, ak_tuning: dict | None = None,
+                 monitor: StragglerMonitor | None = None,
+                 supervisor: Supervisor | None = None):
+        if cfg.family not in ENGINE_FAMILIES:
+            raise ValueError(
+                f"family {cfg.family!r} not engine-schedulable (supported: "
+                f"{ENGINE_FAMILIES}); use launch.serve.serve_loop"
+            )
+        if prompt_pad > cache_len:
+            raise ValueError("prompt_pad must fit the cache")
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.cache_len = cache_len
+        self.prompt_pad = prompt_pad
+        self.temperature = temperature
+        self.top_k = top_k
+        self.top_p = top_p
+        self.eos_id = eos_id
+        self.fused_sampler = fused_sampler
+        self.overlap = overlap
+        self.ak_tuning = ak_tuning
+        self.monitor = monitor if monitor is not None else StragglerMonitor(1)
+        self.supervisor = supervisor
+
+        self._decode = functools.partial(_decode_jit, cfg=cfg)
+        self._prefill = functools.partial(
+            _prefill_jit, cfg=cfg, cache_len=cache_len
+        )
+        self._keys = functools.partial(_keys_jit, seed=seed)
+        # recurrent state integrates every fed token — pad tokens would
+        # corrupt it (unlike KV caches, where pad columns are overwritten
+        # or causally masked), so ssm/hybrid prefill at true length
+        self._pad_prompts = cfg.family in ("dense", "moe")
+
+    # -- sampling ----------------------------------------------------------
+    def _scope(self):
+        return (
+            registry.tuning.preset("sampler") if self.ak_tuning is None
+            else registry.tuning.overrides(self.ak_tuning)
+        )
+
+    def _sample(self, keys, logits):
+        from repro.launch import serve  # lazy: serve imports this module
+
+        with self._scope():
+            return serve.sample_logits(
+                keys, logits, temperature=self.temperature,
+                top_k=self.top_k, top_p=self.top_p, vocab=self.cfg.vocab,
+                fused=self.fused_sampler,
+            )
+
+    # -- the slot-scheduled loop ------------------------------------------
+    def run(self, requests) -> tuple[dict, EngineStats]:
+        """Serve ``requests`` (any count >= 0, any order); returns
+        ({rid: RequestResult}, EngineStats). Every request completes even
+        with more requests than slots — finished slots refill from the
+        queue in admission order, live neighbours undisturbed."""
+        cfg, B = self.cfg, self.slots
+        queue = deque(Request(r.rid, np.asarray(r.prompt, np.int32),
+                              r.max_new) for r in requests)
+        results: dict[int, RequestResult] = {}
+        stats = EngineStats()
+
+        caches = M.zero_caches(cfg, batch=B, cache_len=self.cache_len)
+        cur_tok = jnp.zeros((B, 1), jnp.int32)
+        pos = np.full((B,), self.cache_len, np.int32)   # parked lanes
+        slot_rid: list = [None] * B                     # host slot map
+        budget: dict[int, int] = {}                     # rid -> max tokens
+        emitted: dict[int, int] = {}                    # rid -> bookkept
+        next_idx: dict[int, int] = {}                   # rid -> next sample
+        retired: dict[int, bool] = {}
+        # double buffer: (tokens_dev, slot-map snapshot, step no) whose
+        # host bookkeeping is deferred past the next dispatch
+        pending: deque = deque()
+        depth = 1 if self.overlap else 0
+
+        def retire_check(rid, tok):
+            return (self.eos_id is not None and tok == self.eos_id) or (
+                emitted[rid] >= budget[rid]
+            )
+
+        def admit(slot) -> bool:
+            """Pop a request into ``slot``; returns True if the slot is
+            live afterwards (False: the request retired on its very first
+            token — EOS immediately or max_new == 1)."""
+            nonlocal caches, cur_tok
+            req = queue.popleft()
+            plen = int(req.prompt.shape[0])
+            if not 0 < plen <= self.prompt_pad:
+                raise ValueError(
+                    f"request {req.rid}: prompt len {plen} not in "
+                    f"(0, {self.prompt_pad}]"
+                )
+            t0 = time.perf_counter()
+            if self._pad_prompts:
+                tok_in = np.zeros((1, self.prompt_pad), np.int32)
+                tok_in[0, :plen] = req.prompt
+            else:
+                tok_in = req.prompt[None, :]
+            logits, caches = self._prefill(
+                self.params, jnp.asarray(tok_in), caches, slot
+            )
+            key0 = self._keys(np.asarray([req.rid], np.int32),
+                              np.asarray([0], np.int32))
+            tok0 = self._sample(key0, logits[:, plen - 1])
+            rid = req.rid
+            # token i >= 1 is decoded with input token i-1 written at cache
+            # column plen + i - 1; the last input must stay in-cache
+            budget[rid] = min(req.max_new, self.cache_len + 1 - plen)
+            emitted[rid] = 0
+            next_idx[rid] = 1
+            retired[rid] = False
+            results[rid] = RequestResult(rid=rid, tokens=[],
+                                         admitted_step=stats.steps)
+            stats.prefills += 1
+            t = int(tok0[0])            # sync — prefill is per-request
+            stats.prefill_s += time.perf_counter() - t0
+            results[rid].tokens.append(t)
+            emitted[rid] = 1
+            stats.tokens += 1
+            if retire_check(rid, t):
+                results[rid].finished_step = stats.steps
+                retired[rid] = True
+                return False
+            cur_tok = cur_tok.at[slot, 0].set(tok0[0])
+            slot_rid[slot] = rid
+            pos[slot] = plen
+            return True
+
+        def admit_free_slots():
+            for b in range(B):
+                while slot_rid[b] is None and queue:
+                    if admit(b):
+                        break  # slot is live; next free slot
+
+        def bookkeep(toks_host, snapshot, step_no):
+            """Record one fetched step; returns freed slot indices."""
+            freed = []
+            for b in range(B):
+                rid = snapshot[b]
+                if rid is None or retired.get(rid, True):
+                    continue
+                tok = int(toks_host[b])
+                results[rid].tokens.append(tok)
+                emitted[rid] += 1
+                stats.tokens += 1
+                if retire_check(rid, tok):
+                    results[rid].finished_step = step_no
+                    retired[rid] = True
+                    freed.append(b)
+            return freed
+
+        t_run = time.perf_counter()
+        admit_free_slots()
+
+        while True:
+            live = [b for b in range(B) if slot_rid[b] is not None
+                    and not retired[slot_rid[b]]]
+            if not live and not pending:
+                if queue:           # every admitted request insta-retired
+                    admit_free_slots()
+                    continue
+                break
+
+            if live:
+                snapshot = list(slot_rid)
+                step_no = stats.steps
+                logits, caches = self._decode(
+                    self.params, cur_tok, caches, jnp.asarray(pos)
+                )
+                rids = np.asarray(
+                    [-1 if r is None else r for r in slot_rid], np.int32)
+                idxs = np.asarray(
+                    [0 if r is None else next_idx[r] for r in slot_rid],
+                    np.int32)
+                keys = self._keys(rids, idxs)
+                tok = self._sample(keys, logits[:, 0])
+                cur_tok = tok[:, None]
+                for b in live:
+                    rid = slot_rid[b]
+                    next_idx[rid] += 1
+                    pos[b] = min(pos[b] + 1, self.cache_len)
+                stats.steps += 1
+                stats.slot_util.append(len(live) / B)
+                pending.append((tok, snapshot, step_no))
+
+            # drain deferred bookkeeping (fully once no lane is live)
+            while len(pending) > (depth if live else 0):
+                t0 = time.perf_counter()
+                toks_dev, snapshot, step_no = pending.popleft()
+                freed = bookkeep(np.asarray(toks_dev), snapshot, step_no)
+                for b in freed:
+                    slot_rid[b] = None
+                    pos[b] = self.cache_len
+                self.monitor.record(0, time.perf_counter() - t0)
+                if self.supervisor is not None:
+                    self.supervisor.beat(0)
+            admit_free_slots()
+
+        jax.block_until_ready(cur_tok)
+        stats.decode_s = max(
+            time.perf_counter() - t_run - stats.prefill_s, 1e-9
+        )
+        return results, stats

@@ -1,16 +1,25 @@
-"""Serving driver: batched prefill + decode with AK-primitive sampling.
+"""Serving driver — a thin CLI over the continuous-batching engine.
 
 The sampler is deliberately built from the paper's primitives — this is the
 "sorting is the hot path of real applications" claim made executable:
 
     top-k cut       -> ak.topk                     (sort-derived)
-    top-p (nucleus) -> ak.sortperm_batched descending over the whole batch
-                       + ak.accumulate (inclusive prefix sum)
-                       + ak.searchsortedfirst      (cut index)
+    top-p (nucleus) -> ak.nucleus_mask             (ONE fused registry call:
+                       descending sortperm + inclusive prefix sum + top-p
+                       cut + keep-mask scatter; kernels/nucleus_kernel.py)
 
-``serve_loop`` runs fixed-batch continuous decoding: every sequence decodes
-until EOS/limit; finished slots are refilled from the request queue
-(slot-level continuous batching — the static-shape TPU variant).
+``fused=False`` keeps the historical unfused composition (sortperm_batched
++ vmapped accumulate + vmapped searchsortedfirst + XLA scatter) — the
+serving gate (benchmarks/serving.py) counts its launches against the fused
+path's every CI run.
+
+The actual serving loop lives in ``launch.engine``: a slot scheduler with
+per-slot decode state, EOS/limit retirement, in-place refill from a request
+queue under fully static shapes, and EOS-aware token accounting.
+``serve_loop`` (the fixed-batch entry point the tests and examples use)
+delegates to the engine for the schedulable families and keeps a small
+fixed-batch fallback for encdec/vlm (whose per-request encoder/vision
+features are not slot-refillable yet).
 """
 from __future__ import annotations
 
@@ -20,9 +29,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import core as ak
 from repro.core import registry
+from repro.kernels.common import NEG_MASK
+from repro.launch.engine import ENGINE_FAMILIES, Engine, Request
 from repro.models import model as M
 
 # Registry tuning for the decode-step sampler. Per step the sampler touches
@@ -43,47 +55,69 @@ SAMPLER_TUNING = registry.tuning.register_preset("sampler", {
     "topk": {"switch_below": 4096},
     "accumulate": {"switch_below": 4096},
     "searchsorted": {"switch_below": 4096},
+    "nucleus_mask": {"switch_below": 4096},
 })
 
 
+def _batched_keys(rng):
+    """True when ``rng`` is a batch of per-row keys: (B, 2) raw uint32 keys
+    or a (B,) typed key array — the engine's per-request sampling path."""
+    if jnp.issubdtype(rng.dtype, jnp.unsignedinteger):
+        return rng.ndim == 2
+    return rng.ndim == 1      # typed key dtype
+
+
 def sample_logits(rng, logits, *, temperature=1.0, top_k=0, top_p=1.0,
-                  vocab=None):
-    """logits: (B, V) -> token ids (B,). AK-primitive nucleus sampling."""
+                  vocab=None, fused=True):
+    """logits: (B, V) -> token ids (B,). AK-primitive nucleus sampling.
+
+    ``rng``: one key for the whole batch, or a batch of per-row keys (the
+    engine passes per-request keys so a sampled token depends only on the
+    request, never the slot/batch it rides in). ``fused=True`` routes the
+    top-p mask through the fused ``nucleus_mask`` primitive (1 registry
+    dispatch); ``fused=False`` is the historical unfused composition.
+    """
     B, V = logits.shape
     lg = logits.astype(jnp.float32)
     if vocab is not None and vocab < V:
-        lg = jnp.where(jnp.arange(V)[None, :] < vocab, lg, -jnp.inf)
+        lg = jnp.where(jnp.arange(V)[None, :] < vocab, lg, NEG_MASK)
     if temperature <= 0.0:
         return jnp.argmax(lg, axis=-1).astype(jnp.int32)
     lg = lg / temperature
 
-    if top_k:
+    if top_k and top_k < V:
         kth = ak.topk(lg, top_k)[0][:, -1]
-        lg = jnp.where(lg < kth[:, None], -jnp.inf, lg)
+        lg = jnp.where(lg < kth[:, None], NEG_MASK, lg)
 
     if top_p < 1.0:
-        # descending order for the WHOLE batch in one batched sortperm —
-        # the network's vmap batching rule makes the batch a grid dim
-        # instead of round-tripping each row through the 1-D primitive
-        order = ak.sortperm_batched(-lg)
-        probs = jax.nn.softmax(
-            jnp.take_along_axis(lg, order, axis=-1), axis=-1
-        )
+        if fused:
+            keep = ak.nucleus_mask(lg, top_p=float(top_p))
+        else:
+            # the unfused composition the fused primitive replaced:
+            # descending order for the WHOLE batch in one batched sortperm,
+            # then a vmapped per-row scan + search + an XLA scatter
+            order = ak.sortperm_batched(-lg)
+            probs = jax.nn.softmax(
+                jnp.take_along_axis(lg, order, axis=-1), axis=-1
+            )
 
-        def cut_row(crow):
-            # host-scalar init keeps one registry cache key (a device
-            # scalar would route to the uncached path); first index where
-            # cumulative mass exceeds top_p — AK scan + search
-            cum = ak.accumulate(jnp.add, crow, init=0.0)
-            return ak.searchsortedfirst(cum, jnp.float32(top_p)[None])[0]
+            def cut_row(crow):
+                # host-scalar init keeps one registry cache key (a device
+                # scalar would route to the uncached path); first index
+                # where cumulative mass exceeds top_p — AK scan + search
+                cum = ak.accumulate(jnp.add, crow, init=0.0)
+                return ak.searchsortedfirst(cum, jnp.float32(top_p)[None])[0]
 
-        cut = jax.vmap(cut_row)(probs)
-        keep_sorted = jnp.arange(V)[None, :] <= cut[:, None]
-        keep = jnp.zeros_like(keep_sorted).at[
-            jnp.arange(B)[:, None], order
-        ].set(keep_sorted)
-        lg = jnp.where(keep, lg, -jnp.inf)
+            cut = jax.vmap(cut_row)(probs)
+            keep_sorted = jnp.arange(V)[None, :] <= cut[:, None]
+            keep = jnp.zeros_like(keep_sorted).at[
+                jnp.arange(B)[:, None], order
+            ].set(keep_sorted)
+        lg = jnp.where(keep, lg, NEG_MASK)
 
+    rng = jnp.asarray(rng)
+    if _batched_keys(rng):
+        return jax.vmap(jax.random.categorical)(rng, lg).astype(jnp.int32)
     return jax.random.categorical(rng, lg).astype(jnp.int32)
 
 
@@ -91,7 +125,7 @@ def sample_logits(rng, logits, *, temperature=1.0, top_k=0, top_p=1.0,
 class ServeStats:
     prefill_s: float
     decode_s: float
-    tokens: int
+    tokens: int          # EOS-aware when the loop ran with an eos_id
 
     @property
     def tokens_per_s(self):
@@ -99,29 +133,59 @@ class ServeStats:
 
 
 def serve_loop(params, cfg, prompts, *, max_new: int = 32, cache_len: int,
-               temperature=1.0, top_k=0, top_p=1.0, seed=0,
-               frames=None, patches=None, ak_tuning=None):
+               temperature=1.0, top_k=0, top_p=1.0, seed=0, eos_id=None,
+               frames=None, patches=None, ak_tuning=None, fused=True):
     """prompts: (B, S_prompt) int32. Returns (generated (B, max_new), stats).
+
+    Engine-schedulable families run through the continuous-batching engine
+    (one slot per prompt row; EOS-aware token accounting — a sequence that
+    stops early pads its output row with ``eos_id`` and stops counting).
+    encdec/vlm take the fixed-batch fallback.
 
     ``ak_tuning``: per-primitive registry overrides for the sampler's AK
     primitives ({primitive: {tunable: value}}); default: the "sampler"
     preset (which a measured autotune cache, when attached, overrides
     per size class — explicit ak_tuning beats both).
     """
+    if cfg.family in ENGINE_FAMILIES and frames is None and patches is None:
+        B, S = prompts.shape
+        eng = Engine(
+            params, cfg, slots=B, cache_len=cache_len, prompt_pad=S,
+            temperature=temperature, top_k=top_k, top_p=top_p, seed=seed,
+            eos_id=eos_id, fused_sampler=fused, ak_tuning=ak_tuning,
+        )
+        host = np.asarray(prompts, np.int32)
+        results, es = eng.run(
+            [Request(rid=i, prompt=host[i], max_new=max_new)
+             for i in range(B)]
+        )
+        pad = eos_id if eos_id is not None else 0
+        toks = np.full((B, max_new), pad, np.int32)
+        for i in range(B):
+            got = results[i].tokens[:max_new]
+            toks[i, :len(got)] = got
+        return jnp.asarray(toks), ServeStats(
+            prefill_s=es.prefill_s, decode_s=es.decode_s, tokens=es.tokens
+        )
+
     scope = (
         registry.tuning.preset("sampler") if ak_tuning is None
         else registry.tuning.overrides(ak_tuning)
     )
     with scope:
-        return _serve_loop(
+        return _serve_loop_fixed(
             params, cfg, prompts, max_new=max_new, cache_len=cache_len,
             temperature=temperature, top_k=top_k, top_p=top_p, seed=seed,
-            frames=frames, patches=patches,
+            frames=frames, patches=patches, fused=fused,
         )
 
 
-def _serve_loop(params, cfg, prompts, *, max_new, cache_len, temperature,
-                top_k, top_p, seed, frames, patches):
+def _serve_loop_fixed(params, cfg, prompts, *, max_new, cache_len,
+                      temperature, top_k, top_p, seed, frames, patches,
+                      fused):
+    """Fixed-batch reference loop (encdec/vlm): shared scalar position, no
+    EOS, no refill — the pre-engine behaviour, kept for the families whose
+    cross-attention caches are not slot-refillable yet."""
     B, S = prompts.shape
     rng = jax.random.PRNGKey(seed)
 
@@ -141,13 +205,15 @@ def _serve_loop(params, cfg, prompts, *, max_new, cache_len, temperature,
     out = []
     rng, k = jax.random.split(rng)
     tok = sample_logits(k, logits[:, -1], temperature=temperature,
-                        top_k=top_k, top_p=top_p, vocab=cfg.vocab)
+                        top_k=top_k, top_p=top_p, vocab=cfg.vocab,
+                        fused=fused)
     out.append(tok)
     for step in range(max_new - 1):
         logits, caches = decode(params, tok[:, None], caches, pos + step)
         rng, k = jax.random.split(rng)
         tok = sample_logits(k, logits[:, 0], temperature=temperature,
-                            top_k=top_k, top_p=top_p, vocab=cfg.vocab)
+                            top_k=top_k, top_p=top_p, vocab=cfg.vocab,
+                            fused=fused)
         out.append(tok)
     toks = jax.block_until_ready(jnp.stack(out, axis=1))
     t2 = time.perf_counter()
@@ -161,30 +227,60 @@ def main(argv=None):
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2_1_8b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--top-k", type=int, default=16)
     ap.add_argument("--top-p", type=float, default=0.95)
+    ap.add_argument("--eos", type=int, default=None,
+                    help="EOS token id (default: none — run to max-new)")
+    ap.add_argument("--unfused", action="store_true",
+                    help="use the historical unfused top-p composition")
     args = ap.parse_args(argv)
 
     cfg = load_smoke_config(args.arch)
     rng = jax.random.PRNGKey(0)
     params = M.init_params(rng, cfg)
-    prompts = jax.random.randint(
-        rng, (args.batch, args.prompt_len), 0, cfg.vocab
-    )
+    prompts = np.asarray(jax.random.randint(
+        rng, (args.requests, args.prompt_len), 0, cfg.vocab
+    ))
+
+    if cfg.family in ENGINE_FAMILIES:
+        eng = Engine(
+            params, cfg, slots=args.slots,
+            cache_len=args.prompt_len + args.max_new,
+            prompt_pad=args.prompt_len, top_k=args.top_k, top_p=args.top_p,
+            eos_id=args.eos, fused_sampler=not args.unfused,
+        )
+        results, stats = eng.run([
+            Request(rid=i, prompt=prompts[i], max_new=args.max_new)
+            for i in range(args.requests)
+        ])
+        done = sum(r.finished_step >= 0 for r in results.values())
+        print(
+            f"served {done}/{args.requests} requests on {args.slots} slots; "
+            f"{stats.tokens} tokens in {stats.steps} steps; "
+            f"prefill {stats.prefill_s:.3f}s; "
+            f"decode {stats.tokens_per_s:.1f} tok/s; "
+            f"slot util {stats.mean_slot_util:.2f}"
+        )
+        return
+
+    # encdec/vlm: fixed-batch fallback
     extras = {}
     if cfg.family == "encdec":
         extras["frames"] = jnp.zeros(
-            (args.batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
+            (args.slots, cfg.enc_seq, cfg.d_model), cfg.dtype)
     if cfg.family == "vlm":
         extras["patches"] = jnp.zeros(
-            (args.batch, cfg.vision_seq, cfg.d_model), cfg.dtype)
+            (args.slots, cfg.vision_seq, cfg.d_model), cfg.dtype)
     toks, stats = serve_loop(
-        params, cfg, prompts, max_new=args.max_new,
+        params, cfg, jnp.asarray(prompts[:args.slots]),
+        max_new=args.max_new,
         cache_len=args.prompt_len + args.max_new,
-        top_k=args.top_k, top_p=args.top_p, **extras,
+        top_k=args.top_k, top_p=args.top_p, fused=not args.unfused,
+        **extras,
     )
     print(f"generated {toks.shape} tokens; prefill {stats.prefill_s:.3f}s; "
           f"decode {stats.tokens_per_s:.1f} tok/s")

@@ -89,22 +89,35 @@ def blockwise_attention(q, k, v, *, causal, q_offset=0, chunk=1024,
     reshard — measured in EXPERIMENTS.md §Perf iteration 1.)
 
     Scans KV in chunks with running (max, sum, acc) — flash-style memory.
-    ``q_offset``: absolute position of q[0] relative to k[0] for causality.
+    ``q_offset``: absolute position of q[0] relative to k[0] for causality —
+    a scalar, or a (B,) per-row vector (the serving engine's per-slot
+    attention-length mask: each slot attends its own ``[0, pos_b]`` prefix
+    of the shared cache, so refilled neighbours and not-yet-written tail
+    slots stay invisible).
     """
     B, Sq, H, hd = q.shape
     Sk, KV = k.shape[1], k.shape[2]
     G = H // KV
     scale = 1.0 / math.sqrt(hd)
     qg = (q * scale).astype(jnp.float32).reshape(B, Sq, KV, G, hd)
+    q_off = jnp.asarray(q_offset)
+    # q_pos: (Sq,) shared offset, or (B, Sq) per-row offsets
+    q_pos = q_off[..., None] + jnp.arange(Sq)
+
+    def _apply_mask(s, mask):
+        # s: (B, KV, G, Sq, chunk); mask: (Sq, chunk) or (B, Sq, chunk)
+        m = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+        return jnp.where(m, s, -jnp.inf), m
+
     if Sq == 1:
         # decode fast path: one query row — materialising (B,KV,G,1,Sk)
         # scores is cheap and avoids the KV-chunk scan entirely (and its
         # O(chunks) sequential HLO at 500k context).
         s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
         k_pos = jnp.arange(Sk)
-        mask = (k_pos[None, :] <= (q_offset + jnp.arange(Sq))[:, None]
+        mask = (k_pos <= q_pos[..., None]
                 if causal else jnp.ones((Sq, Sk), bool))
-        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        s, _ = _apply_mask(s, mask)
         p = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
         return out.reshape(B, Sq, H, hd).astype(q.dtype)
@@ -117,24 +130,22 @@ def blockwise_attention(q, k, v, *, causal, q_offset=0, chunk=1024,
     kc = k.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
     vc = v.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
 
-    q_pos = q_offset + jnp.arange(Sq)
-
     def step(carry, inputs):
         m, l, acc = carry                      # (B,KV,G,Sq) / +(,hd)
         ci, kb, vb = inputs
         k_pos = ci * chunk + jnp.arange(chunk)
         s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb.astype(jnp.float32))
-        mask = k_pos[None, :] <= q_pos[:, None] if causal else (
-            k_pos[None, :] >= 0
+        mask = k_pos <= q_pos[..., None] if causal else (
+            jnp.ones(q_pos.shape + (chunk,), bool)
         )
         valid = k_pos < Sk  # padding chunk guard
-        mask = mask & valid[None, :]
-        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        mask = mask & valid
+        s, mb = _apply_mask(s, mask)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> nan
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
         p = jnp.exp(s - m_safe[..., None])
-        p = jnp.where(mask[None, None, None], p, 0.0)
+        p = jnp.where(mb, p, 0.0)
         corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
         corr = jnp.where(jnp.isfinite(m), corr, 0.0)
         l_new = l * corr + jnp.sum(p, axis=-1)
@@ -177,7 +188,11 @@ def attention_apply(
     """Self- or cross-attention with optional KV cache.
 
     cache: dict(k=(B, S_cache, KV, hd), v=...) — decode appends at
-    ``cache_index`` and attends over the full cache.
+    ``cache_index`` and attends over the full cache. ``cache_index`` is a
+    scalar (all rows at the same position — the classic fixed-batch decode)
+    or a (B,) vector of per-slot positions (continuous batching: each slot
+    writes its own cache column and attends its own valid prefix;
+    out-of-range positions drop the write — a parked/finished slot).
     Returns (out, new_cache).
     """
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -193,14 +208,30 @@ def attention_apply(
 
     new_cache = None
     if cache is not None:
-        k = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0)
-        )
-        v = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0)
-        )
+        ci = jnp.asarray(cache_index)
+        if ci.ndim == 1:
+            # per-slot scatter: row b writes cache columns ci[b]..ci[b]+Sq-1
+            # (out-of-bounds slots DROP — they are parked lanes, and a
+            # clamped write would corrupt the last cache column)
+            cols = ci[:, None] + jnp.arange(Sq)[None, :]       # (B, Sq)
+            rows = jnp.arange(B)[:, None]
+            k = cache["k"].at[rows, cols].set(
+                k.astype(cache["k"].dtype), mode="drop"
+            )
+            v = cache["v"].at[rows, cols].set(
+                v.astype(cache["v"].dtype), mode="drop"
+            )
+        else:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype),
+                (0, cache_index, 0, 0)
+            )
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0)
+            )
         new_cache = {"k": k, "v": v}
-        # mask out not-yet-written cache slots via causal offset
+        # mask out not-yet-written cache slots via causal offset (per-row
+        # when cache_index is the engine's per-slot position vector)
         q_offset = cache_index
         causal = True
     else:

@@ -12,6 +12,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import NEG_MASK
 from repro.models import layers as L
 from repro.models import sharding as SH
 from repro.models import ssm as SSM
@@ -281,7 +282,7 @@ def loss_fn(params, cfg, tokens, labels, *, frames=None, patches=None,
     logits = logits.astype(jnp.float32)
     V = _vocab(cfg)
     iota = jnp.arange(V)
-    logits = jnp.where(iota[None, None, :] < cfg.vocab, logits, -1e30)
+    logits = jnp.where(iota[None, None, :] < cfg.vocab, logits, NEG_MASK)
     m = jnp.max(logits, axis=-1, keepdims=True)          # (B,S,1) reduce
     lse = m[..., 0] + jnp.log(
         jnp.sum(jnp.exp(logits - m), axis=-1)
@@ -364,7 +365,13 @@ def cache_specs(cfg, *, batch, cache_len):
 def decode_step(params, cfg, tokens, caches, position, *, chunk=1024):
     """One serve step: tokens (B, 1) + caches -> (logits (B, 1, V), caches).
 
-    ``position``: scalar int32 — absolute index of the incoming token.
+    ``position``: absolute index of the incoming token — a scalar int32
+    (every row at the same position: the classic fixed-batch loop) or a
+    (B,) int32 vector of PER-SLOT positions (continuous batching: each slot
+    is at its own point in its own sequence; RoPE, the cache write column
+    and the attention-length mask all follow the vector; positions past the
+    cache length park the slot — the write drops and the lane decodes
+    garbage nobody reads).
     """
     return _decode(params, cfg, tokens, caches, position, chunk=chunk)
 
@@ -375,7 +382,8 @@ def _decode(params, cfg, tokens, caches, position, *, chunk=1024):
     writes land in slots [0, S) and causal masking hides the empty tail)."""
     B, S = tokens.shape
     x = L.embed(params["embed"], tokens)
-    positions = position + jnp.arange(S)
+    # scalar position -> (S,) shared positions; (B,) vector -> (B, S)
+    positions = jnp.asarray(position)[..., None] + jnp.arange(S)
     fam = cfg.family
 
     if fam in ("dense", "moe"):
@@ -561,3 +569,61 @@ def prefill(params, cfg, tokens, *, cache_len, frames=None, patches=None,
     logits, caches = _decode(params, cfg, tokens, caches, jnp.int32(0),
                              chunk=chunk)
     return logits, caches, jnp.int32(S)
+
+
+def cache_batch_axes(cfg):
+    """Pytree (same structure as ``cache_specs``) of each cache leaf's
+    BATCH axis index.
+
+    The slot scheduler treats one batch row as one serving slot; refilling
+    a slot means rewriting exactly that row of every cache leaf. The batch
+    axis is NOT uniform across families (hybrid/vlm stack macro-group axes
+    in front), so the map is written down explicitly next to
+    ``cache_specs`` — the two must agree leaf for leaf."""
+    fam = cfg.family
+    kv1 = {"k": 1, "v": 1}
+    if fam in ("dense", "moe"):
+        return {"kv": kv1}
+    if fam == "ssm":
+        return {"ssm": 1, "conv": 1}
+    if fam == "hybrid":
+        _, _, tail = _hybrid_shape(cfg)
+        out = {"ssm": 2, "conv": 2, "kv": kv1}
+        if tail:
+            out["ssm_tail"] = 1
+            out["conv_tail"] = 1
+        return out
+    if fam == "encdec":
+        return {"kv": kv1, "xkv": kv1}
+    if fam == "vlm":
+        return {"kv": {"k": 2, "v": 2}, "xkv": kv1}
+    raise ValueError(fam)
+
+
+def slot_prefill(params, cfg, tokens, caches, slot, *, cache_len,
+                 frames=None, patches=None, chunk=1024):
+    """Prefill ONE request into slot ``slot`` of a shared decode cache.
+
+    tokens: (1, S) int32 prompt (right-pad to a fixed S so the engine jits
+    this once); ``slot``: int32 batch row (traced). Runs a batch-1 prefill
+    into a fresh zero cache and writes the result into row ``slot`` of
+    every leaf of ``caches`` via a size-1 dynamic-slice update along that
+    leaf's batch axis — live neighbouring slots are untouched bit for bit,
+    and the whole slot row is overwritten (the refilled slot needs no
+    separate reset: stale K/V beyond the prompt is either rewritten by
+    later decode steps or hidden by the per-slot attention-length mask).
+
+    Returns (logits (1, S, V), new shared caches).
+    """
+    logits, fresh, _ = prefill(
+        params, cfg, tokens, cache_len=cache_len, frames=frames,
+        patches=patches, chunk=chunk,
+    )
+    slot = jnp.asarray(slot, jnp.int32)
+    new = jax.tree.map(
+        lambda big, small, ax: jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=ax
+        ),
+        caches, fresh, cache_batch_axes(cfg),
+    )
+    return logits, new

@@ -69,7 +69,8 @@ STREAM_PRIMITIVES = (
     "map", "mapreduce", "accumulate", "searchsorted", "minmax_histogram",
 )
 SORT_PRIMITIVES = ("sort", "sort_kv", "argsort")
-BATCHED_PRIMITIVES = ("sort_batched", "argsort_batched", "topk")
+BATCHED_PRIMITIVES = ("sort_batched", "argsort_batched", "topk",
+                      "nucleus_mask")
 MERGE_PRIMITIVES = ("merge", "merge_kv")
 TUNED_PRIMITIVES = (
     STREAM_PRIMITIVES + SORT_PRIMITIVES + BATCHED_PRIMITIVES
@@ -80,6 +81,7 @@ TUNED_PRIMITIVES = (
 #: the keys (values / indices): twice the modelled HBM traffic.
 _PAYLOAD = (
     "sort_kv", "argsort", "merge_kv", "argsort_batched", "topk",
+    "nucleus_mask",
 )
 
 #: Merge geometry the model assumes (the distributed finish's run count).
@@ -104,7 +106,8 @@ _HYPER_GRID = (0, 1, 2, 3, 4)
 
 
 def supports_dtype(name: str, dtype) -> bool:
-    if name == "minmax_histogram":  # bin edges are float arithmetic
+    if name in ("minmax_histogram", "nucleus_mask"):
+        # bin edges / softmax mass are float arithmetic
         return jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
     return True
 
@@ -218,11 +221,15 @@ def make_operands(name: str, n: int, dtype) -> tuple[tuple, dict]:
         return (x,), {}
     if name == "sort_kv":
         return (x, jnp.arange(n, dtype=jnp.int32)), {}
-    if name in ("sort_batched", "argsort_batched", "topk"):
+    if name in ("sort_batched", "argsort_batched", "topk", "nucleus_mask"):
         xb = jnp.asarray(
             np.stack([np.roll(host, i) for i in range(BATCH_ROWS)])
         )
-        return (xb,), ({"k": min(8, n)} if name == "topk" else {})
+        if name == "topk":
+            return (xb,), {"k": min(8, n)}
+        if name == "nucleus_mask":
+            return (xb,), {"top_p": 0.9}
+        return (xb,), {}
     if name == "searchsorted":
         hay = jnp.sort(x)
         q = x[: max(n // 4, 1)]
