@@ -208,8 +208,12 @@ def roofline_table(recs, dr_recs=None):
 
 def serving_table(json_path=None):
     """Serving trajectory (BENCH_serve.json): tok/s, fused-vs-unfused
-    sampler launches per decode step, and slot utilisation per recorded
-    entry. Missing/invalid files degrade to a hint line, never an error."""
+    sampler launches per decode step, slot utilisation, and — for entries
+    recorded since the paged KV cache landed — the memory-economics
+    columns (resident bytes per active token paged vs contiguous,
+    page-pool occupancy, prefix-reuse hit rate). Entries predating the
+    paged engine show '-'. Missing/invalid files degrade to a hint line,
+    never an error."""
     path = json_path or os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_serve.json",
@@ -219,8 +223,9 @@ def serving_table(json_path=None):
                 f"`PYTHONPATH=src python -m benchmarks.serving`)")
     lines = [
         "| arch | req/slots | tokens (EOS-aware / naive) | steps | "
-        "launches/step fused vs unfused | slot util | tok/s (wallclock) |",
-        "|---|---|---|---|---|---|---|",
+        "launches/step fused vs unfused | slot util | tok/s (wallclock) | "
+        "resident B/token paged vs contig | occupancy | prefix hit rate |",
+        "|---|---|---|---|---|---|---|---|---|---|",
     ]
     try:
         with open(path) as f:
@@ -228,12 +233,21 @@ def serving_table(json_path=None):
         for e in entries:
             sl = e.get("sampler_launches", {})
             wc = e.get("wallclock", {})
+            pg = e.get("paged") or {}
+            bpt = pg.get("resident_bytes_per_active_token") or {}
+            mem = (
+                f"{bpt.get('paged')} vs {bpt.get('contiguous')} "
+                f"({bpt.get('ratio')}x)" if bpt else "-"
+            )
+            occ = pg.get("mean_occupancy", "-")
+            hit = (pg.get("prefix_reuse") or {}).get("hit_rate", "-")
             lines.append(
                 f"| {e.get('arch')} | {e.get('requests')}/{e.get('slots')} "
                 f"| {e.get('tokens_eos_aware')} / {e.get('tokens_naive')} | "
                 f"{e.get('decode_steps')} | "
                 f"{sl.get('fused')} vs {sl.get('unfused')} | "
-                f"{e.get('mean_slot_util')} | {wc.get('tok_s', '-')} |"
+                f"{e.get('mean_slot_util')} | {wc.get('tok_s', '-')} | "
+                f"{mem} | {occ} | {hit} |"
             )
     except (OSError, json.JSONDecodeError, KeyError, TypeError,
             AttributeError) as e:

@@ -15,12 +15,24 @@ Asserted here (and re-run by the CI ``serve-smoke`` + ``bench-smoke`` jobs):
     impossible now).
   * **completion gate** — more requests than slots all complete, in
     admission order, with finite latencies.
+  * **paged-equality gate** — the paged (block-pool) engine is
+    token-identical to the contiguous engine on a skewed-length mix at
+    equal slot count, with the AK-driven defragmenter firing mid-flight.
+  * **paged-memory gate** — on that mix the paged engine holds at most
+    HALF the resident cache bytes per live token (pages back only what
+    lanes actually hold; contiguous rows back the worst case).
+  * **prefix-reuse gate** — identical prompts share prompt pages
+    copy-on-write: strictly fewer fresh prompt-page allocations than
+    ``requests x prompt_pages``, with hits and at least one COW fork.
 
-The engine run itself is greedy (temperature 0) on a smoke config so every
-number below is deterministic across machines; wall-clock tok/s is recorded
-as informational only. A trajectory entry goes to ``BENCH_serve.json`` via
-the shared ``append_json`` — skipped when the deterministic part is
-identical to the last recorded entry, exactly like the other trajectories.
+The engine runs are greedy (temperature 0) on a smoke config so every
+number below is deterministic across machines; wall-clock tok/s is
+recorded as informational only — and split into first-trace compile cost
+(``compile_prefill_s`` / ``compile_decode_s``) vs steady state, so the
+recorded throughput no longer folds XLA compilation into decode time. A
+trajectory entry goes to ``BENCH_serve.json`` via the shared
+``append_json`` — skipped when the deterministic part is identical to the
+last recorded entry, exactly like the other trajectories.
 """
 from __future__ import annotations
 
@@ -64,6 +76,102 @@ def count_sampler_launches(*, fused: bool, b: int = COUNT_B,
         return KC.launch_count()
 
 
+#: Page size for the paged-vs-contiguous comparison runs.
+PAGE_SIZE = 4
+
+
+def _paged_comparison(params, cfg, *, slots, requests, prompt_len,
+                      max_new, cache_len):
+    """Skewed-length mix at equal slot count, both engines greedy:
+    token-identity + the resident-bytes-per-active-token ratio. Returns
+    the deterministic paged sub-entry for the trajectory."""
+    from repro.launch.engine import Engine, Request
+
+    # deterministic skewed mix — the serving shape that motivates paging:
+    # one "whale" request at the full prompt/decode budget per slot group,
+    # the rest short-lived. The contiguous engine backs every slot at the
+    # worst case; the paged engine backs only the pages lanes hold.
+    rng = np.random.default_rng(42)
+    reqs = []
+    for i in range(requests):
+        whale = i % slots == 0
+        plen = prompt_len if whale else 1 + (i % 2)
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, (plen,)).astype(np.int32),
+            max_new=max_new if whale else 2 + (i % 2),
+        ))
+
+    def run_mode(paged):
+        eng = Engine(
+            params, cfg, slots=slots, cache_len=cache_len,
+            prompt_pad=prompt_len, temperature=0.0, paged=paged,
+            page_size=PAGE_SIZE if paged else None,
+            defrag_every=1 if paged else 0,
+        )
+        res, st = eng.run(list(reqs))
+        return {r: res[r].tokens for r in res}, st
+
+    want, contig = run_mode(False)
+    got, paged = run_mode(True)
+    # GATE: the paged engine is token-identical to the contiguous one
+    assert got == want, "paged engine diverged from contiguous tokens"
+    # GATE: the AK-driven defragmenter fired mid-flight (staggered
+    # retirements fragment the free list) and identity still held
+    assert paged.defrags > 0, paged.defrags
+    bpt_contig = contig.resident_bytes_per_active_token
+    bpt_paged = paged.resident_bytes_per_active_token
+    # GATE: pages back only what lanes hold — at least 2x tighter than
+    # the contiguous worst-case rows on the skewed mix
+    assert bpt_paged * 2 <= bpt_contig, (bpt_paged, bpt_contig)
+
+    # prefix-reuse run: identical non-page-aligned prompts, so every
+    # prompt page of requests 2..N is a COW share and the first decode
+    # write into the partial tail page forks
+    share_plen = prompt_len + 1 if (prompt_len + 1) % PAGE_SIZE else \
+        prompt_len + 2
+    prompt = rng.integers(0, cfg.vocab, (share_plen,)).astype(np.int32)
+    eng = Engine(params, cfg, slots=slots, cache_len=cache_len,
+                 prompt_pad=share_plen, temperature=0.0, paged=True,
+                 page_size=PAGE_SIZE)
+    sres, sst = eng.run([
+        Request(rid=i, prompt=prompt, max_new=max_new)
+        for i in range(slots)
+    ])
+    prompt_pages = -(-share_plen // PAGE_SIZE)
+    # GATE: sharing allocated strictly fewer fresh prompt pages than
+    # requests x prompt-pages, with hits and at least one COW fork; the
+    # sharers' outputs stay identical
+    assert sst.prefix_hits > 0 and sst.cow_forks > 0, (
+        sst.prefix_hits, sst.cow_forks)
+    assert sst.prompt_pages_allocated < slots * prompt_pages, (
+        sst.prompt_pages_allocated, slots * prompt_pages)
+    assert len({tuple(r.tokens) for r in sres.values()}) == 1
+
+    return {
+        "page_size": PAGE_SIZE,
+        "num_pages": int(paged.num_pages),
+        "requests": requests,
+        "defrags": int(paged.defrags),
+        "pages_allocated_total": int(paged.pages_allocated_total),
+        "resident_bytes_per_active_token": {
+            "contiguous": round(bpt_contig, 2),
+            "paged": round(bpt_paged, 2),
+            "ratio": round(bpt_contig / max(bpt_paged, 1e-9), 2),
+        },
+        "mean_occupancy": round(paged.mean_occupancy, 4),
+        "prefix_reuse": {
+            "requests": slots,
+            "prompt_pages": prompt_pages,
+            "prompt_pages_allocated": int(sst.prompt_pages_allocated),
+            "lookups": int(sst.prefix_lookups),
+            "hits": int(sst.prefix_hits),
+            "hit_rate": round(sst.prefix_hit_rate, 4),
+            "cow_forks": int(sst.cow_forks),
+        },
+    }
+
+
 def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
         prompt_len: int = 5, max_new: int = 6,
         json_path: str | None = BENCH_JSON):
@@ -84,7 +192,12 @@ def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
     prompts = np.asarray(
         jax.random.randint(rng, (requests, prompt_len), 0, cfg.vocab)
     )
-    cache_len = prompt_len + max_new
+    # a page_size multiple (so the SAME cache_len serves the contiguous
+    # run and the paged comparison — equal attention widths keep the two
+    # engines bitwise comparable) plus one page of headroom: deployments
+    # provision rows for the max model length, which the contiguous
+    # engine pays for on every slot and the paged engine only when held
+    cache_len = (-(-(prompt_len + max_new) // PAGE_SIZE) + 1) * PAGE_SIZE
 
     def engine(eos):
         return Engine(params, cfg, slots=slots, cache_len=cache_len,
@@ -118,6 +231,11 @@ def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
     assert stats.tokens < requests * max_new, stats.tokens
     assert any(r.tokens[-1] == eos for r in results.values())
 
+    paged_entry = _paged_comparison(
+        params, cfg, slots=slots, requests=requests,
+        prompt_len=prompt_len, max_new=max_new, cache_len=cache_len,
+    )
+
     tok_s = stats.tokens_per_s
     entry = {
         "entry": "serving",
@@ -135,17 +253,25 @@ def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
         "mean_slot_util": round(stats.mean_slot_util, 4),
         "sampler_launches": {"fused": fused, "unfused": unfused,
                              "b": COUNT_B, "v": COUNT_V},
-        # informational only — excluded from the skip-if-identical compare
+        "paged": paged_entry,
+        # informational only — excluded from the skip-if-identical
+        # compare. First-trace compile cost is split out of the steady
+        # numbers: decode_s/prefill_s are steady state, tok_s is computed
+        # over steady decode only.
         "wallclock": {
             "tok_s": round(tok_s, 2),
             "prefill_s": round(stats.prefill_s, 4),
             "decode_s": round(stats.decode_s, 4),
+            "compile_prefill_s": round(stats.compile_prefill_s, 4),
+            "compile_decode_s": round(stats.compile_decode_s, 4),
             "total_s": round(wall_s, 4),
         },
     }
     if json_path:
         _append_if_new(json_path, entry)
 
+    pg = paged_entry["resident_bytes_per_active_token"]
+    pr = paged_entry["prefix_reuse"]
     return [
         (
             "serve.launches",
@@ -158,7 +284,18 @@ def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
             stats.decode_s / max(stats.tokens, 1) * 1e6,
             f"{requests}req/{slots}slots tokens={stats.tokens} "
             f"(naive {requests * max_new}) steps={stats.steps} "
-            f"util={stats.mean_slot_util:.2f} tok/s={tok_s:.1f}(wallclock)",
+            f"util={stats.mean_slot_util:.2f} tok/s={tok_s:.1f}(wallclock "
+            f"steady; compile {stats.compile_decode_s:.2f}s split out)",
+        ),
+        (
+            "serve.paged",
+            0.0,
+            f"bytes/active-token {pg['paged']} vs {pg['contiguous']} "
+            f"contiguous ({pg['ratio']}x, gate >=2x) "
+            f"occupancy={paged_entry['mean_occupancy']:.2f} "
+            f"defrags={paged_entry['defrags']} "
+            f"prefix hits {pr['hits']}/{pr['lookups']} "
+            f"forks={pr['cow_forks']}: PASS",
         ),
     ]
 

@@ -5,13 +5,29 @@ sort/scan/searchsorted nucleus sampler (launch/serve.py) — the paper's
 primitives on the serving hot path.
 
     PYTHONPATH=src python examples/serve_llm.py
+    PYTHONPATH=src python examples/serve_llm.py --paged --page-size 8
+
+``--paged`` swaps the per-slot contiguous KV rows for the block-pool
+paged cache (DESIGN.md §8a): same tokens bit for bit, but resident cache
+bytes track what lanes actually hold instead of the worst case.
 """
+import argparse
+
 import jax
-import jax.numpy as jnp
 
 from repro.configs import load_smoke_config
 from repro.launch.serve import serve_loop
 from repro.models import model as M
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--paged", action="store_true",
+                help="block-pool KV cache with COW prefix reuse")
+ap.add_argument("--page-size", type=int, default=None,
+                help="tokens per KV page (default: the page_gather "
+                     "primitive's tuned knob)")
+ap.add_argument("--num-pages", type=int, default=None,
+                help="page-pool size (default: full footprint)")
+args = ap.parse_args()
 
 cfg = load_smoke_config("internlm2_1_8b")
 rng = jax.random.PRNGKey(0)
@@ -24,8 +40,10 @@ toks, stats = serve_loop(
     params, cfg, prompts,
     max_new=max_new, cache_len=S_prompt + max_new,
     temperature=0.8, top_k=50, top_p=0.95,
+    paged=args.paged, page_size=args.page_size, num_pages=args.num_pages,
 )
-print(f"batch={B} prompt={S_prompt} generated={max_new}/seq")
+mode = "paged" if args.paged else "contiguous"
+print(f"batch={B} prompt={S_prompt} generated={max_new}/seq ({mode})")
 print(f"prefill: {stats.prefill_s*1e3:.1f} ms")
 print(f"decode : {stats.tokens_per_s:.1f} tok/s "
       f"({stats.decode_s*1e3:.1f} ms total)")

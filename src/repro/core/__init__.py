@@ -33,6 +33,7 @@ from repro.core.sort import (
 )
 from repro.core.search import searchsortedfirst, searchsortedlast
 from repro.core.histogram import bincount, minmax_histogram
+from repro.core.paging import page_gather
 from repro.core.distributed import (
     ShardedSort,
     collect_sorted,
@@ -52,6 +53,7 @@ __all__ = [
     "sortperm_batched", "sortperm_lowmem", "topk",
     "searchsortedfirst", "searchsortedlast",
     "bincount", "minmax_histogram",
+    "page_gather",
     "ShardedSort", "collect_sorted", "count_collectives", "sihsort",
     "sihsort_sharded",
 ]

@@ -1,0 +1,20 @@
+"""Paged-memory primitive: block-table page gather.
+
+Not one of the paper's public §II-B primitives, but the same shape of
+thing — a data-movement building block registered once and dispatched per
+backend. The serving engine's paged KV cache (launch/paging.py,
+DESIGN.md §8a) reads K/V through this; the allocator around it is composed
+from the existing suite (searchsortedfirst, bincount, merge_sort_by_key).
+"""
+from __future__ import annotations
+
+from repro.core import registry
+
+_page_gather = registry.get("page_gather")
+
+
+def page_gather(pages, block_table, *, backend: str | None = None):
+    """Gather pages (P, page_size, ...) through block_table (B, T) int32
+    into the logical per-sequence view (B, T * page_size, ...). Table
+    entries must be valid page ids in [0, P)."""
+    return _page_gather(pages, block_table, backend=backend)

@@ -56,7 +56,7 @@ from repro.core import dispatch
 from repro.kernels import common as KC
 from repro.kernels import hist_kernel, map_kernel, reduce_kernel, scan_kernel
 from repro.kernels import merge_kernel, nucleus_kernel, search_kernel
-from repro.kernels import sort_kernel
+from repro.kernels import page_kernel, sort_kernel
 from repro.kernels import ref as kref
 
 
@@ -72,8 +72,12 @@ from repro.kernels import ref as kref
 #: ``sort_hyper``: the bitonic network's hyper-block order m — each cross
 #: launch fuses up to m stages over 2^m blocks in VMEM (None = the kernel's
 #: default, 0 = the unfused one-launch-per-stage baseline; sort family only).
+#: ``page_size``: tokens per KV-cache page (None = the primitive's own
+#: default; power of two so page/offset splits are shifts; page_gather and
+#: the paged serving engine only).
 TUNABLE_KEYS = (
-    "switch_below", "interpret", "block_rows", "block_cols", "sort_hyper"
+    "switch_below", "interpret", "block_rows", "block_cols", "sort_hyper",
+    "page_size",
 )
 
 #: What the streaming (map/reduce/scan/hist/search) kernels honour — all the
@@ -86,6 +90,7 @@ _COMMON_DEFAULTS = {
     "block_rows": None,
     "block_cols": None,
     "sort_hyper": None,
+    "page_size": None,
 }
 
 #: Primitives built on the bitonic network: their block must stay a power of
@@ -143,6 +148,16 @@ def _validate_tuning(name: str, kv: dict, allowed=TUNABLE_KEYS) -> None:
             # and double buffering
             raise ValueError(
                 f"sort_hyper must be None or an int in [0, 6], got {v!r}"
+            )
+        if k == "page_size" and not (
+            v is None or (isinstance(v, int) and not isinstance(v, bool)
+                          and 1 <= v <= 1024 and not (v & (v - 1)))
+        ):
+            # pow2 keeps (page, offset) splits cheap; 1024 tokens/page is
+            # already a whole contiguous cache row at serving scale
+            raise ValueError(
+                f"page_size must be None or a power-of-two int in "
+                f"[1, 1024], got {v!r}"
             )
 
 
@@ -706,11 +721,12 @@ accumulate_p = register(Primitive(
     doc="prefix scan (inclusive/exclusive), single pass",
 ))
 
-# The sort family honours the full knob set: block geometry re-tiles the
-# network (power-of-two blocks only — validated above) and ``sort_hyper``
-# picks how many cross stages each hyper-block launch fuses in VMEM
-# (kernels/sort_kernel.py; DESIGN.md §2a).
-_SORT_TUNABLES = TUNABLE_KEYS
+# The sort family honours the streaming knobs plus ``sort_hyper``: block
+# geometry re-tiles the network (power-of-two blocks only — validated
+# above) and ``sort_hyper`` picks how many cross stages each hyper-block
+# launch fuses in VMEM (kernels/sort_kernel.py; DESIGN.md §2a). NOT the
+# full TUNABLE_KEYS: ``page_size`` belongs to the paged-cache gather only.
+_SORT_TUNABLES = STREAM_TUNABLES + ("sort_hyper",)
 
 sort_p = register(Primitive(
     "sort",
@@ -851,4 +867,13 @@ minmax_histogram_p = register(Primitive(
 bincount_p = register(Primitive(
     "bincount", _bincount_impl, None,
     doc="integer-id counts in [0, nbins) via segment_sum (both backends)",
+))
+
+page_gather_p = register(Primitive(
+    "page_gather", page_kernel.page_gather_ref, page_kernel.page_gather_blocks,
+    tunables=("switch_below", "interpret", "page_size"),
+    tuning_defaults={"page_size": 8},
+    doc="paged KV-cache gather: pages (P, ps, ...) + block table (B, T) -> "
+        "logical (B, T*ps, ...); scalar-prefetch BlockSpec indirection on "
+        "TPU. Owns the ``page_size`` knob the paged engine resolves.",
 ))

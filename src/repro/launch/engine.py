@@ -44,6 +44,26 @@ restores strictly synchronous bookkeeping (used by the equivalence tests).
 Every step reports a heartbeat + step time into ``runtime.supervisor``
 (Supervisor.beat / StragglerMonitor.record) — the serving loop joins the
 elasticity layer that so far only train loops fed.
+
+PAGED KV CACHE (``paged=True``; dense/moe only). Instead of one contiguous
+``cache_len`` row per slot, K/V lives in a shared pool of ``num_pages``
+fixed-size pages (``page_size`` — a TuningTable knob owned by the
+``page_gather`` primitive) and each lane carries a block table mapping its
+logical columns onto pool pages. Memory then tracks ACTUAL sequence
+lengths: a lane holds ``ceil((prompt + decoded) / page_size)`` pages, not a
+worst-case row — the resident-bytes-per-active-token gap the serving
+benchmark gates on. The host-side allocator (launch/paging.py) composes AK
+primitives for its hot ops (accumulate+searchsortedfirst free-page search,
+bincount occupancy, merge_sort_by_key defrag ordering) and adds
+copy-on-write prefix reuse: prompt pages are keyed by their exact token
+chain at admission, an exact-chain hit SHARES the resident page (refcount)
+instead of recomputing it, and the first decode write into a shared page
+forks a private copy. Admission defers while the pool is too full for the
+next request's prompt (+1 page of decode headroom) — retirements free
+pages incrementally (per request, the moment it finishes), so a waiting
+request admits as soon as enough of the pool returns. Under ``__debug__``
+every engine step asserts free-list conservation (allocated + free ==
+pool, and pool references == engine-held references).
 """
 from __future__ import annotations
 
@@ -57,6 +77,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import registry
+from repro.kernels import common as KC
+from repro.launch.paging import PagePool
 from repro.models import model as M
 from repro.runtime.supervisor import StragglerMonitor, Supervisor
 
@@ -81,6 +103,35 @@ def _decode_jit(params, tok, caches, pos, *, cfg):
 def _prefill_jit(params, tok, caches, slot, *, cfg, cache_len):
     return M.slot_prefill(params, cfg, tok, caches, slot,
                           cache_len=cache_len)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
+                   donate_argnums=(2,))
+def _decode_paged_jit(params, tok, caches, pos, bt, *, cfg, page_size):
+    return M.decode_step(params, cfg, tok, caches, pos,
+                         block_tables=bt, page_size=page_size)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "cache_len", "page_size"),
+                   donate_argnums=(2,))
+def _paged_prefill_jit(params, tok, caches, page_ids, *, cfg, cache_len,
+                       page_size):
+    return M.paged_prefill(params, cfg, tok, caches, page_ids,
+                           cache_len=cache_len, page_size=page_size)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page_jit(caches, src, dst):
+    """COW fork: duplicate page ``src`` into page ``dst`` across all K/V
+    leaves (page axis 1; layer axis 0 copied whole)."""
+    return jax.tree.map(lambda c: c.at[:, dst].set(c[:, src]), caches)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _gather_pages_jit(caches, perm):
+    """Defrag move: new page p takes old page perm[p], bit for bit."""
+    return jax.tree.map(lambda c: jnp.take(c, perm, axis=1), caches)
 
 
 @functools.partial(jax.jit, static_argnames=("seed",))
@@ -116,14 +167,43 @@ class RequestResult:
 class EngineStats:
     """EOS-aware accounting: ``tokens`` counts exactly the tokens handed
     back to requests — dead-lane garbage after a sequence's EOS never
-    inflates tok/s (the fix for the old ``B * max_new`` overcount)."""
+    inflates tok/s (the fix for the old ``B * max_new`` overcount).
+
+    Wallclock is split compile-vs-steady: the FIRST prefill and the FIRST
+    decode step carry the jax trace+compile cost (seconds against
+    millisecond steps — the old ``prefill_s`` was compile-dominated and
+    useless as a throughput number); they are recorded separately in
+    ``compile_prefill_s``/``compile_decode_s`` and ``prefill_s``/
+    ``decode_s`` hold only the steady-state repeats.
+
+    Paged-mode memory accounting (``resident_bytes``/``active_tokens``/
+    ``occupancy`` sampled once per decode step): ``active_tokens`` counts
+    the logical tokens live lanes actually hold, ``resident_bytes`` the
+    cache bytes backing them — a contiguous engine's resident bytes are
+    constant at ``slots * cache_len`` worth while the paged pool tracks
+    real lengths, which is exactly what
+    ``resident_bytes_per_active_token`` compares."""
 
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    compile_prefill_s: float = 0.0
+    compile_decode_s: float = 0.0
     steps: int = 0
     tokens: int = 0
     prefills: int = 0
     slot_util: list = dataclasses.field(default_factory=list)
+    # -- paged-cache accounting (empty lists / zeros when not applicable) --
+    page_size: int = 0
+    num_pages: int = 0
+    pages_allocated_total: int = 0   # cumulative allocator grants
+    prompt_pages_allocated: int = 0  # fresh prompt pages (misses) only —
+    prefix_lookups: int = 0          # vs requests * prompt_pages naive
+    prefix_hits: int = 0
+    cow_forks: int = 0
+    defrags: int = 0
+    occupancy: list = dataclasses.field(default_factory=list)
+    resident_bytes: list = dataclasses.field(default_factory=list)
+    active_tokens: list = dataclasses.field(default_factory=list)
 
     @property
     def tokens_per_s(self) -> float:
@@ -132,6 +212,24 @@ class EngineStats:
     @property
     def mean_slot_util(self) -> float:
         return float(np.mean(self.slot_util)) if self.slot_util else 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return float(np.mean(self.occupancy)) if self.occupancy else 0.0
+
+    @property
+    def resident_bytes_per_active_token(self) -> float:
+        """Mean over decode steps of resident cache bytes per live logical
+        token — the paged-vs-contiguous memory-economics number."""
+        pairs = [(r, a) for r, a in zip(self.resident_bytes,
+                                        self.active_tokens) if a > 0]
+        if not pairs:
+            return 0.0
+        return float(np.mean([r / a for r, a in pairs]))
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(self.prefix_lookups, 1)
 
 
 class Engine:
@@ -142,6 +240,8 @@ class Engine:
                  top_k: int = 0, top_p: float = 1.0, seed: int = 0,
                  eos_id: int | None = None, fused_sampler: bool = True,
                  overlap: bool = True, ak_tuning: dict | None = None,
+                 paged: bool = False, page_size: int | None = None,
+                 num_pages: int | None = None, defrag_every: int = 0,
                  monitor: StragglerMonitor | None = None,
                  supervisor: Supervisor | None = None):
         if cfg.family not in ENGINE_FAMILIES:
@@ -176,6 +276,51 @@ class Engine:
         # or causally masked), so ssm/hybrid prefill at true length
         self._pad_prompts = cfg.family in ("dense", "moe")
 
+        # bytes one logical cache token costs (K + V across layers) — the
+        # memory-economics metric; attention-KV families only
+        self._token_bytes = (
+            cfg.n_layers * 2 * cfg.n_kv_heads * cfg.head_dim
+            * jnp.dtype(cfg.dtype).itemsize
+            if cfg.family in ("dense", "moe") else 0
+        )
+
+        self.paged = paged
+        self.defrag_every = defrag_every
+        if paged:
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"paged KV cache needs an attention-family cache; "
+                    f"{cfg.family!r} carries recurrent state"
+                )
+            if page_size is None:
+                # the knob lives with the page_gather primitive so the
+                # engine, the tune sweep and the kernel agree on geometry
+                page_size = registry.tuning.lookup("page_gather")["page_size"]
+            self.page_size = int(page_size or 8)
+            if cache_len % self.page_size:
+                # equal attention widths (T * page_size == cache_len) keep
+                # the paged math BITWISE equal to the contiguous engine —
+                # masked-out tail columns contribute exact zeros either
+                # way, but a wider reduction regroups the non-zero partials
+                raise ValueError(
+                    f"cache_len ({cache_len}) must be a multiple of "
+                    f"page_size ({self.page_size})"
+                )
+            self.table_len = cache_len // self.page_size
+            self.num_pages = (
+                int(num_pages) if num_pages is not None
+                else slots * self.table_len
+            )
+            self._decode_paged = functools.partial(
+                _decode_paged_jit, cfg=cfg, page_size=self.page_size
+            )
+            self._prefill_paged = functools.partial(
+                _paged_prefill_jit, cfg=cfg, cache_len=cache_len,
+                page_size=self.page_size,
+            )
+        else:
+            self.page_size = self.num_pages = self.table_len = 0
+
     # -- sampling ----------------------------------------------------------
     def _scope(self):
         return (
@@ -205,7 +350,21 @@ class Engine:
         results: dict[int, RequestResult] = {}
         stats = EngineStats()
 
-        caches = M.zero_caches(cfg, batch=B, cache_len=self.cache_len)
+        if self.paged:
+            caches = M.zero_paged_caches(
+                cfg, num_pages=self.num_pages, page_size=self.page_size
+            )
+            pool = PagePool(self.num_pages, self.page_size)
+            # host block tables; num_pages = the unbacked sentinel (the
+            # device copy clamps it to a valid — masked — page id)
+            bt = np.full((B, self.table_len), self.num_pages, np.int32)
+            held: dict[int, list[int]] = {}   # rid -> pages it references
+            stats.page_size = self.page_size
+            stats.num_pages = self.num_pages
+        else:
+            caches = M.zero_caches(cfg, batch=B, cache_len=self.cache_len)
+            pool = None
+            bt = held = None
         cur_tok = jnp.zeros((B, 1), jnp.int32)
         pos = np.full((B,), self.cache_len, np.int32)   # parked lanes
         slot_rid: list = [None] * B                     # host slot map
@@ -217,6 +376,7 @@ class Engine:
         # host bookkeeping is deferred past the next dispatch
         pending: deque = deque()
         depth = 1 if self.overlap else 0
+        ps = self.page_size
 
         def retire_check(rid, tok):
             return (self.eos_id is not None and tok == self.eos_id) or (
@@ -241,9 +401,46 @@ class Engine:
                 tok_in[0, :plen] = req.prompt
             else:
                 tok_in = req.prompt[None, :]
-            logits, caches = self._prefill(
-                self.params, jnp.asarray(tok_in), caches, slot
-            )
+            if self.paged:
+                # prompt pages: exact-token-chain lookup first (a hit
+                # SHARES the resident page — its K/V is determined by the
+                # chain under causal masking + absolute RoPE), allocate
+                # only misses; page_vec keeps the static ceil(prompt_pad /
+                # page_size) length with the don't-write sentinel in
+                # shared and beyond-prompt slots so one prefill trace
+                # serves every admission.
+                n_pp = KC.ceil_div(plen, ps)
+                page_vec = np.full((KC.ceil_div(self.prompt_pad, ps),),
+                                   self.num_pages, np.int32)
+                row = np.full((self.table_len,), self.num_pages, np.int32)
+                rid_pages = []
+                for i in range(n_pp):
+                    end = min((i + 1) * ps, plen)
+                    key = tuple(int(t) for t in req.prompt[:end])
+                    stats.prefix_lookups += 1
+                    hit = pool.lookup(key)
+                    if hit is not None:
+                        pool.share(hit)
+                        stats.prefix_hits += 1
+                        row[i] = hit
+                    else:
+                        pg = pool.alloc(1)[0]
+                        pool.register_key(pg, key)
+                        row[i] = pg
+                        page_vec[i] = pg
+                        stats.prompt_pages_allocated += 1
+                    rid_pages.append(int(row[i]))
+                bt[slot] = row
+                held[req.rid] = rid_pages
+                stats.pages_allocated_total = pool.allocs_total
+                logits, caches = self._prefill_paged(
+                    self.params, jnp.asarray(tok_in), caches,
+                    jnp.asarray(page_vec)
+                )
+            else:
+                logits, caches = self._prefill(
+                    self.params, jnp.asarray(tok_in), caches, slot
+                )
             key0 = self._keys(np.asarray([req.rid], np.int32),
                               np.asarray([0], np.int32))
             tok0 = self._sample(key0, logits[:, plen - 1])
@@ -258,22 +455,42 @@ class Engine:
                                          admitted_step=stats.steps)
             stats.prefills += 1
             t = int(tok0[0])            # sync — prefill is per-request
-            stats.prefill_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            if stats.prefills == 1:
+                stats.compile_prefill_s = dt   # trace+compile dominated
+            else:
+                stats.prefill_s += dt
             results[rid].tokens.append(t)
             emitted[rid] = 1
             stats.tokens += 1
             if retire_check(rid, t):
                 results[rid].finished_step = stats.steps
                 retired[rid] = True
+                if self.paged:     # retired on its first token: give the
+                    for pg in held.pop(rid, []):     # pages straight back
+                        pool.release(pg)
+                    bt[slot] = self.num_pages
                 return False
             cur_tok = cur_tok.at[slot, 0].set(tok0[0])
             slot_rid[slot] = rid
             pos[slot] = plen
             return True
 
+        def can_admit(req) -> bool:
+            """Paged admission gate: defer while the pool cannot cover the
+            request's prompt pages (all assumed fresh — prefix hits only
+            help) plus one page of decode headroom. Deferred requests wait
+            for retirements to release pages back."""
+            if not self.paged:
+                return True
+            need = KC.ceil_div(int(req.prompt.shape[0]), ps) + 1
+            return pool.free_count() >= need
+
         def admit_free_slots():
             for b in range(B):
                 while slot_rid[b] is None and queue:
+                    if not can_admit(queue[0]):
+                        return
                     if admit(b):
                         break  # slot is live; next free slot
 
@@ -294,6 +511,24 @@ class Engine:
                     freed.append(b)
             return freed
 
+        def do_defrag():
+            """Compact the pool: AK-sorted permutation (allocated pages
+            first, ids ascending — stable for resident data), one device
+            gather moves the bytes bit for bit, then host refcounts /
+            prefix index / block tables relabel through the inverse."""
+            nonlocal caches
+            perm = pool.defrag_order()
+            if np.array_equal(perm, np.arange(self.num_pages)):
+                return
+            caches = _gather_pages_jit(caches, jnp.asarray(perm))
+            inv = pool.apply_perm(perm)
+            backed = bt < self.num_pages
+            bt[backed] = inv[bt[backed]]
+            for rid_h, pgs in held.items():   # the rid->pages references
+                held[rid_h] = [int(inv[p]) for p in pgs]
+            stats.defrags += 1
+
+        retires_since_defrag = 0
         t_run = time.perf_counter()
         admit_free_slots()
 
@@ -302,16 +537,63 @@ class Engine:
                     and not retired[slot_rid[b]]]
             if not live and not pending:
                 if queue:           # every admitted request insta-retired
+                    qlen = len(queue)    # ...or waiting on pool pages
                     admit_free_slots()
+                    if len(queue) == qlen and all(
+                        r is None for r in slot_rid
+                    ):
+                        raise RuntimeError(
+                            f"page pool too small: request "
+                            f"{queue[0].rid} needs "
+                            f"{KC.ceil_div(len(queue[0].prompt), ps) + 1} "
+                            f"pages, {pool.free_count()}/{self.num_pages} "
+                            f"free with nothing left to retire"
+                        )
                     continue
                 break
 
             if live:
                 snapshot = list(slot_rid)
                 step_no = stats.steps
-                logits, caches = self._decode(
-                    self.params, cur_tok, caches, jnp.asarray(pos)
-                )
+                first_step = stats.steps == 0
+                t_step = time.perf_counter()
+                if self.paged:
+                    # back the column each live lane writes THIS step:
+                    # grow into an unbacked table slot, or fork a shared
+                    # page (copy-on-write) so co-owners never see the write
+                    for b in live:
+                        p_next = int(pos[b])
+                        if p_next >= self.cache_len:
+                            continue
+                        si = p_next // ps
+                        cur_pg = int(bt[b, si])
+                        rid_b = slot_rid[b]
+                        if cur_pg >= self.num_pages:
+                            pg = pool.alloc(1)[0]
+                            bt[b, si] = pg
+                            held[rid_b].append(pg)
+                        elif pool.refcount[cur_pg] > 1:
+                            pg = pool.fork(cur_pg)
+                            caches = _copy_page_jit(
+                                caches, jnp.int32(cur_pg), jnp.int32(pg)
+                            )
+                            hr = held[rid_b]
+                            hr[hr.index(cur_pg)] = pg
+                            bt[b, si] = pg
+                            stats.cow_forks += 1
+                    stats.pages_allocated_total = pool.allocs_total
+                    # device tables clamp the unbacked sentinel to a valid
+                    # page id: reads of it are hidden by the per-lane
+                    # attention-length mask, writes never target it
+                    bt_dev = jnp.asarray(np.minimum(bt, self.num_pages - 1))
+                    logits, caches = self._decode_paged(
+                        self.params, cur_tok, caches, jnp.asarray(pos),
+                        bt_dev
+                    )
+                else:
+                    logits, caches = self._decode(
+                        self.params, cur_tok, caches, jnp.asarray(pos)
+                    )
                 rids = np.asarray(
                     [-1 if r is None else r for r in slot_rid], np.int32)
                 idxs = np.asarray(
@@ -320,12 +602,31 @@ class Engine:
                 keys = self._keys(rids, idxs)
                 tok = self._sample(keys, logits[:, 0])
                 cur_tok = tok[:, None]
+                if first_step:
+                    # the first decode step carries the trace+compile cost
+                    # (batched decode + batched sampler): record it apart
+                    # so decode_s is steady-state only
+                    jax.block_until_ready(cur_tok)
+                    stats.compile_decode_s = time.perf_counter() - t_step
                 for b in live:
                     rid = slot_rid[b]
                     next_idx[rid] += 1
                     pos[b] = min(pos[b] + 1, self.cache_len)
                 stats.steps += 1
                 stats.slot_util.append(len(live) / B)
+                if self._token_bytes:
+                    # memory economics, sampled per step: logical tokens
+                    # live lanes hold vs the cache bytes backing them
+                    active = sum(int(pos[b]) for b in live)
+                    if self.paged:
+                        resident = (pool.allocated_count() * ps
+                                    * self._token_bytes)
+                        stats.occupancy.append(pool.occupancy()[0])
+                    else:
+                        resident = (B * self.cache_len
+                                    * self._token_bytes)
+                    stats.resident_bytes.append(resident)
+                    stats.active_tokens.append(active)
                 pending.append((tok, snapshot, step_no))
 
             # drain deferred bookkeeping (fully once no lane is live)
@@ -334,15 +635,33 @@ class Engine:
                 toks_dev, snapshot, step_no = pending.popleft()
                 freed = bookkeep(np.asarray(toks_dev), snapshot, step_no)
                 for b in freed:
+                    rid_f = snapshot[b]
                     slot_rid[b] = None
                     pos[b] = self.cache_len
+                    if self.paged:
+                        # incremental release: the pages go back the
+                        # moment THIS request retires, not when the slot
+                        # is eventually refilled
+                        for pg in held.pop(rid_f, []):
+                            pool.release(pg)
+                        bt[b] = self.num_pages
+                if self.paged and self.defrag_every and freed:
+                    retires_since_defrag += len(freed)
+                    if retires_since_defrag >= self.defrag_every:
+                        do_defrag()
+                        retires_since_defrag = 0
                 self.monitor.record(0, time.perf_counter() - t0)
                 if self.supervisor is not None:
                     self.supervisor.beat(0)
             admit_free_slots()
+            if __debug__ and self.paged:
+                pool.assert_conservation(
+                    held_refs=sum(len(v) for v in held.values())
+                )
 
         jax.block_until_ready(cur_tok)
         stats.decode_s = max(
-            time.perf_counter() - t_run - stats.prefill_s, 1e-9
+            time.perf_counter() - t_run - stats.prefill_s
+            - stats.compile_prefill_s - stats.compile_decode_s, 1e-9
         )
         return results, stats

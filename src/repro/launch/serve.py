@@ -134,7 +134,8 @@ class ServeStats:
 
 def serve_loop(params, cfg, prompts, *, max_new: int = 32, cache_len: int,
                temperature=1.0, top_k=0, top_p=1.0, seed=0, eos_id=None,
-               frames=None, patches=None, ak_tuning=None, fused=True):
+               frames=None, patches=None, ak_tuning=None, fused=True,
+               paged=False, page_size=None, num_pages=None):
     """prompts: (B, S_prompt) int32. Returns (generated (B, max_new), stats).
 
     Engine-schedulable families run through the continuous-batching engine
@@ -146,6 +147,11 @@ def serve_loop(params, cfg, prompts, *, max_new: int = 32, cache_len: int,
     primitives ({primitive: {tunable: value}}); default: the "sampler"
     preset (which a measured autotune cache, when attached, overrides
     per size class — explicit ak_tuning beats both).
+
+    ``paged``: block-pool KV cache with copy-on-write prefix reuse
+    (dense/moe; DESIGN.md §8a). ``page_size`` defaults to the
+    ``page_gather`` primitive's TuningTable knob, ``num_pages`` to a
+    full-footprint pool (undersize it to see the admission gate defer).
     """
     if cfg.family in ENGINE_FAMILIES and frames is None and patches is None:
         B, S = prompts.shape
@@ -153,6 +159,7 @@ def serve_loop(params, cfg, prompts, *, max_new: int = 32, cache_len: int,
             params, cfg, slots=B, cache_len=cache_len, prompt_pad=S,
             temperature=temperature, top_k=top_k, top_p=top_p, seed=seed,
             eos_id=eos_id, fused_sampler=fused, ak_tuning=ak_tuning,
+            paged=paged, page_size=page_size, num_pages=num_pages,
         )
         host = np.asarray(prompts, np.int32)
         results, es = eng.run(
@@ -237,6 +244,18 @@ def main(argv=None):
                     help="EOS token id (default: none — run to max-new)")
     ap.add_argument("--unfused", action="store_true",
                     help="use the historical unfused top-p composition")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-pool KV cache with copy-on-write prefix "
+                         "reuse (dense/moe)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page (default: the page_gather "
+                         "primitive's tuned knob)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size (default: full footprint — "
+                         "slots * cache_len / page_size)")
+    ap.add_argument("--defrag-every", type=int, default=0,
+                    help="compact the page pool every N retirements "
+                         "(0: never)")
     args = ap.parse_args(argv)
 
     cfg = load_smoke_config(args.arch)
@@ -247,11 +266,19 @@ def main(argv=None):
     ))
 
     if cfg.family in ENGINE_FAMILIES:
+        cache_len = args.prompt_len + args.max_new
+        if args.paged:
+            # the paged cache requires cache_len % page_size == 0 (decode
+            # attention width must equal the contiguous width bit-for-bit)
+            ps = args.page_size or int(
+                registry.tuning.lookup("page_gather")["page_size"])
+            cache_len = -(-cache_len // ps) * ps
         eng = Engine(
-            params, cfg, slots=args.slots,
-            cache_len=args.prompt_len + args.max_new,
+            params, cfg, slots=args.slots, cache_len=cache_len,
             prompt_pad=args.prompt_len, top_k=args.top_k, top_p=args.top_p,
             eos_id=args.eos, fused_sampler=not args.unfused,
+            paged=args.paged, page_size=args.page_size,
+            num_pages=args.num_pages, defrag_every=args.defrag_every,
         )
         results, stats = eng.run([
             Request(rid=i, prompt=prompts[i], max_new=args.max_new)
@@ -265,6 +292,15 @@ def main(argv=None):
             f"decode {stats.tokens_per_s:.1f} tok/s; "
             f"slot util {stats.mean_slot_util:.2f}"
         )
+        if args.paged:
+            print(
+                f"paged: {stats.num_pages} pages x {stats.page_size} tokens; "
+                f"occupancy {stats.mean_occupancy:.2f}; "
+                f"prefix hits {stats.prefix_hits}/{stats.prefix_lookups}; "
+                f"cow forks {stats.cow_forks}; defrags {stats.defrags}; "
+                f"{stats.resident_bytes_per_active_token:.0f} "
+                f"resident B/active token"
+            )
         return
 
     # encdec/vlm: fixed-batch fallback

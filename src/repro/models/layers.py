@@ -17,6 +17,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry as _registry
 from repro.models import sharding as SH
 
 # ---------------------------------------------------------------------------
@@ -181,6 +182,8 @@ def attention_apply(
     kv_positions=None,
     cache=None,
     cache_index=None,
+    block_table=None,
+    page_size=None,
     use_rope=True,
     chunk=1024,
     unroll=False,
@@ -194,6 +197,18 @@ def attention_apply(
     writes its own cache column and attends its own valid prefix;
     out-of-range positions drop the write — a parked/finished slot).
     Returns (out, new_cache).
+
+    PAGED cache: with ``block_table`` (B, T) int32 + ``page_size``, the
+    cache leaves are a shared page POOL ``(P, page_size, KV, hd)`` instead
+    of per-row sequences. Row b's logical column c lives at physical
+    ``(block_table[b, c // page_size], c % page_size)``: the incoming K/V
+    scatters there (logical columns past ``T * page_size`` — parked lanes —
+    and table slots the allocator never backed both resolve out of range
+    and DROP), and attention reads the logical view back through the
+    ``page_gather`` registry primitive (jnp take / Pallas scalar-prefetch
+    gather). Stale bytes in unwritten page tails are hidden by the same
+    per-row attention-length mask as the contiguous path, so the math is
+    position-for-position identical to the contiguous cache.
     """
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     B, Sq, _ = x.shape
@@ -207,7 +222,30 @@ def attention_apply(
         k = apply_rope(k, kpos, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and block_table is not None:
+        ps = int(page_size)
+        P, T = cache["k"].shape[0], block_table.shape[1]
+        ci = jnp.asarray(cache_index)
+        ci_v = ci if ci.ndim == 1 else jnp.broadcast_to(ci, (B,))
+        cols = ci_v[:, None] + jnp.arange(Sq)[None, :]        # (B, Sq) logical
+        slot = jnp.clip(cols // ps, 0, T - 1)
+        phys = jnp.take_along_axis(block_table, slot, axis=1)  # (B, Sq)
+        # parked lanes (cols >= T*ps) and unbacked table slots (id >= P,
+        # the allocator's sentinel) both land out of range -> drop
+        phys = jnp.where(cols < T * ps, phys, P)
+        offs = cols % ps
+        k = cache["k"].at[phys, offs].set(
+            k.astype(cache["k"].dtype), mode="drop"
+        )
+        v = cache["v"].at[phys, offs].set(
+            v.astype(cache["v"].dtype), mode="drop"
+        )
+        new_cache = {"k": k, "v": v}
+        k = _registry.call("page_gather", k, block_table)  # (B, T*ps, KV, hd)
+        v = _registry.call("page_gather", v, block_table)
+        q_offset = cache_index
+        causal = True
+    elif cache is not None:
         ci = jnp.asarray(cache_index)
         if ci.ndim == 1:
             # per-slot scatter: row b writes cache columns ci[b]..ci[b]+Sq-1

@@ -362,7 +362,36 @@ def cache_specs(cfg, *, batch, cache_len):
     raise ValueError(fam)
 
 
-def decode_step(params, cfg, tokens, caches, position, *, chunk=1024):
+def paged_cache_specs(cfg, *, num_pages, page_size):
+    """ShapeDtypeStructs of the PAGED decode cache: K/V live in a shared
+    pool of ``num_pages`` pages of ``page_size`` tokens instead of per-row
+    sequences — the batch axis disappears, and a (B, T) block table maps
+    each lane's logical columns onto pool pages at decode time.
+
+    Attention-KV families only (dense/moe): recurrent state is O(1) per
+    lane — there is nothing to page."""
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"paged KV cache needs an attention-family cache; family "
+            f"{cfg.family!r} has recurrent state (nothing to page)"
+        )
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (cfg.n_layers, num_pages, page_size, KV, hd)
+    return {"kv": {
+        "k": jax.ShapeDtypeStruct(shape, cfg.dtype),
+        "v": jax.ShapeDtypeStruct(shape, cfg.dtype),
+    }}
+
+
+def zero_paged_caches(cfg, *, num_pages, page_size):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        paged_cache_specs(cfg, num_pages=num_pages, page_size=page_size),
+    )
+
+
+def decode_step(params, cfg, tokens, caches, position, *, chunk=1024,
+                block_tables=None, page_size=None):
     """One serve step: tokens (B, 1) + caches -> (logits (B, 1, V), caches).
 
     ``position``: absolute index of the incoming token — a scalar int32
@@ -372,11 +401,19 @@ def decode_step(params, cfg, tokens, caches, position, *, chunk=1024):
     and the attention-length mask all follow the vector; positions past the
     cache length park the slot — the write drops and the lane decodes
     garbage nobody reads).
+
+    ``block_tables`` (B, T) int32 + ``page_size``: caches are the paged
+    pool from ``paged_cache_specs`` — writes go to (page, offset) through
+    the table, reads come back through the ``page_gather`` primitive.
     """
-    return _decode(params, cfg, tokens, caches, position, chunk=chunk)
+    if block_tables is not None and cfg.family not in ("dense", "moe"):
+        raise ValueError(f"paged decode unsupported for {cfg.family!r}")
+    return _decode(params, cfg, tokens, caches, position, chunk=chunk,
+                   block_tables=block_tables, page_size=page_size)
 
 
-def _decode(params, cfg, tokens, caches, position, *, chunk=1024):
+def _decode(params, cfg, tokens, caches, position, *, chunk=1024,
+            block_tables=None, page_size=None):
     """Cache-stepping forward for any query length: S=1 is the decode step,
     S=prompt_len with zeroed caches and position=0 is the prefill (the KV
     writes land in slots [0, S) and causal masking hides the empty tail)."""
@@ -394,10 +431,14 @@ def _decode(params, cfg, tokens, caches, position, *, chunk=1024):
             cache = {"k": ck, "v": cv}
             if fam == "dense":
                 x, nc = T.dense_block(p, cfg, x, positions, cache=cache,
-                                      cache_index=position, chunk=chunk)
+                                      cache_index=position,
+                                      block_table=block_tables,
+                                      page_size=page_size, chunk=chunk)
             else:
                 x, _, nc = T.moe_block(p, cfg, x, positions, cache=cache,
-                                       cache_index=position, use_ep=False,
+                                       cache_index=position,
+                                       block_table=block_tables,
+                                       page_size=page_size, use_ep=False,
                                        chunk=chunk)
             return x, (nc["k"], nc["v"])
 
@@ -406,7 +447,8 @@ def _decode(params, cfg, tokens, caches, position, *, chunk=1024):
             c0 = {"k": kvs["k"][0], "v": kvs["v"][0]}
             x, nc0 = T.dense_block(params["layer0"], cfg, x, positions,
                                    cache=c0, cache_index=position,
-                                   chunk=chunk)
+                                   block_table=block_tables,
+                                   page_size=page_size, chunk=chunk)
             x, (nk, nv) = scan_layers(
                 body, x, (params["layers"], kvs["k"][1:], kvs["v"][1:]), cfg
             )
@@ -627,3 +669,44 @@ def slot_prefill(params, cfg, tokens, caches, slot, *, cache_len,
         caches, fresh, cache_batch_axes(cfg),
     )
     return logits, new
+
+
+def paged_prefill(params, cfg, tokens, caches, page_ids, *, cache_len,
+                  page_size, chunk=1024):
+    """Prefill ONE request and scatter its prompt K/V pages into the shared
+    page pool.
+
+    tokens: (1, S) right-padded prompt; ``page_ids``: (ceil(S / page_size),)
+    int32 destination pages. Runs the same batch-1 prefill as
+    ``slot_prefill`` — at the same internal ``cache_len``, so logits and
+    K/V bytes are bit-identical to the contiguous engine's — then cuts the
+    first ``len(page_ids)`` pages worth of K/V out of the fresh contiguous
+    row and scatters each to its pool page.
+
+    A page id of ``num_pages`` (one past the pool) is the DON'T-WRITE
+    sentinel: the scatter drops it. The engine uses it for (a) pages past
+    the true prompt length (pure pad — nothing worth storing) and (b)
+    prefix pages SHARED via copy-on-write, whose bytes are already in the
+    pool; K/V at position p depends only on tokens [0, p] (causal mask +
+    absolute RoPE), so an exact token-prefix match at the same positions
+    guarantees the resident bytes equal what this prefill just computed —
+    rewriting them would be a no-op on content but would clobber a
+    co-owner's page if the engine ever mis-shared; dropping is strictly
+    safer.
+
+    Returns (logits (1, S, V), new caches)."""
+    n_pp = page_ids.shape[0]
+    logits, fresh, _ = prefill(params, cfg, tokens, cache_len=cache_len,
+                               chunk=chunk)
+    new = {}
+    for name in ("k", "v"):
+        leaf = fresh["kv"][name]              # (L, 1, cache_len, KV, hd)
+        L = leaf.shape[0]
+        pages = leaf[:, 0, : n_pp * page_size].reshape(
+            L, n_pp, page_size, *leaf.shape[3:]
+        )
+        pool = caches["kv"][name]             # (L, P, page_size, KV, hd)
+        new[name] = pool.at[:, page_ids].set(
+            pages.astype(pool.dtype), mode="drop"
+        )
+    return logits, {"kv": new}

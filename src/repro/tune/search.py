@@ -63,8 +63,9 @@ else:  # pragma: no cover - same numbers, local fallback
 
 
 # Primitives the driver sweeps: the paper's registered suite plus the
-# batched sort family and the §2b merges. bincount has no Pallas impl and
-# no knobs — nothing to tune.
+# batched sort family, the §2b merges, and the serving engine's paged
+# KV-cache gather. bincount has no Pallas impl and no knobs — nothing to
+# tune.
 STREAM_PRIMITIVES = (
     "map", "mapreduce", "accumulate", "searchsorted", "minmax_histogram",
 )
@@ -72,9 +73,10 @@ SORT_PRIMITIVES = ("sort", "sort_kv", "argsort")
 BATCHED_PRIMITIVES = ("sort_batched", "argsort_batched", "topk",
                       "nucleus_mask")
 MERGE_PRIMITIVES = ("merge", "merge_kv")
+PAGED_PRIMITIVES = ("page_gather",)
 TUNED_PRIMITIVES = (
     STREAM_PRIMITIVES + SORT_PRIMITIVES + BATCHED_PRIMITIVES
-    + MERGE_PRIMITIVES
+    + MERGE_PRIMITIVES + PAGED_PRIMITIVES
 )
 
 #: Primitives whose Pallas path carries a same-size payload lane next to
@@ -91,6 +93,15 @@ MERGE_RUNS = 8
 #: in, so a small batch keeps measurement cheap without changing the
 #: per-row crossover the size-class records).
 BATCH_ROWS = 4
+
+#: Feature lanes per cached token in the page_gather sweep (a stand-in for
+#: n_kv_heads * head_dim — the crossover depends on tokens, not lanes).
+PAGE_FEATURES = 16
+
+#: page_size candidates for the page_gather sweep. Unlike block geometry,
+#: page_size shapes the OPERANDS (pool layout + block-table length), so
+#: ``make_operands`` takes the candidate knobs for this primitive.
+_PAGE_GRID = (4, 8, 16, 32, 64, 128)
 
 #: VMEM ceiling for hyper-block candidates: 2^m blocks x itemsize, doubled
 #: for a payload lane and again for double buffering, must fit comfortably.
@@ -119,6 +130,16 @@ def candidates(name: str) -> list[dict]:
     prim = registry.get(name)
     if prim.pallas_impl is None or not prim.tunables:
         return [{}]
+    if "page_size" in prim.tunables:
+        out = [{}]
+        for ps in _PAGE_GRID:
+            kv = {"page_size": ps}
+            try:
+                registry._validate_tuning(name, kv, prim.tunables)
+            except (KeyError, ValueError):
+                continue
+            out.append(kv)
+        return out
     hyper_grid = (
         _HYPER_GRID if "sort_hyper" in prim.tunables else (None,)
     )
@@ -156,6 +177,17 @@ def modelled_time(name: str, backend: str, n: int, itemsize: int,
     candidates past the VMEM budget — the pruning rule."""
     n = max(int(n), 1)
     nb = n * itemsize
+    if name == "page_gather":
+        # n anchors TOKENS per gathered row; bytes scale with the feature
+        # lanes, and the Pallas grid runs one cell per (row, table slot) —
+        # larger pages amortise per-cell dispatch against coarser reuse
+        ps = knobs.get("page_size") or int(
+            registry.tuning.lookup(name)["page_size"])
+        cells = BATCH_ROWS * max(n // int(ps), 1)
+        moved = BATCH_ROWS * n * PAGE_FEATURES * itemsize
+        if backend == "jnp":
+            return jnp_model_time(moved, passes=2.0)
+        return pallas_model_time(2 * moved, cells)
     sortish = name in registry._SORT_FAMILY
     if backend == "jnp":
         if sortish:
@@ -200,12 +232,29 @@ def _host_zero(dtype):
     return 0.0 if jnp.issubdtype(jnp.dtype(dtype), jnp.floating) else 0
 
 
-def make_operands(name: str, n: int, dtype) -> tuple[tuple, dict]:
+def make_operands(name: str, n: int, dtype,
+                  knobs: dict | None = None) -> tuple[tuple, dict]:
     """Representative (operands, static opts) for one timed call of
     ``name`` at size-class anchor ``n`` (last-axis length for the batched
-    primitives). Deterministic: seeded host RNG."""
+    primitives). Deterministic: seeded host RNG. ``knobs`` matters only
+    for primitives whose candidate knobs shape the operands themselves
+    (page_gather: the candidate page_size fixes the pool layout and the
+    block-table length)."""
     dt = jnp.dtype(dtype)
     rng = np.random.default_rng(0)
+    if name == "page_gather":
+        ps = (knobs or {}).get("page_size") or int(
+            registry.tuning.lookup(name)["page_size"])
+        ps = int(ps)
+        T = max(n // ps, 1)
+        P = BATCH_ROWS * T + 2     # slack so tables are not a permutation
+        shape = (P, ps, PAGE_FEATURES)
+        if jnp.issubdtype(dt, jnp.floating):
+            pool = rng.standard_normal(shape).astype(dt)
+        else:
+            pool = rng.integers(-(2**20), 2**20, size=shape).astype(dt)
+        bt = rng.integers(0, P, (BATCH_ROWS, T)).astype(np.int32)
+        return (jnp.asarray(pool), jnp.asarray(bt)), {}
     if jnp.issubdtype(dt, jnp.floating):
         host = rng.standard_normal(n).astype(dt)
     else:
@@ -260,7 +309,17 @@ def model_measure(name: str, backend: str, operands: tuple, opts: dict,
     same cache bytes on every machine."""
     prim = registry.get(name)
     x = operands[0]
-    n = x.shape[-1] if prim.switch_measure == "last_axis" else x.size
+    if name == "page_gather":
+        # the token anchor is what the block table gathers, and the model
+        # must see the page size the operands were actually built with
+        pages, bt = operands[0], operands[1]
+        n = bt.shape[-1] * pages.shape[1]
+        knobs = dict(knobs or {})
+        knobs.setdefault("page_size", pages.shape[1])
+    elif prim.switch_measure == "last_axis":
+        n = x.shape[-1]
+    else:
+        n = x.size
     return modelled_time(name, backend, n, jnp.dtype(x.dtype).itemsize,
                          knobs)
 
@@ -316,7 +375,13 @@ def search_one(name: str, n: int, dtype, *, measure=None,
                 "inf"
             ):
                 continue  # pruned: past the VMEM budget
-            t = measure(name, "pallas", operands, opts, kv)
+            if "page_size" in prim.tunables:
+                # the candidate knob shapes the operands (pool layout +
+                # block-table length), not just the kernel geometry
+                ops_kv, opts_kv = make_operands(name, n, dtype, kv)
+            else:
+                ops_kv, opts_kv = operands, opts
+            t = measure(name, "pallas", ops_kv, opts_kv, kv)
             if kv == {}:
                 t_by_backend["pallas_default"] = t
             if t < best[2]:

@@ -1,0 +1,361 @@
+"""Paged KV cache: page-pool allocator, COW prefix reuse, defrag, and
+paged-vs-contiguous engine equality.
+
+Covers the PR-6 acceptance criteria:
+  * allocator safety: no page is ever handed out twice while held, shared
+    (refcounted) pages are never freed while shared, conservation
+    (allocated + free == pool) holds under arbitrary op sequences
+    (hypothesis-driven when available, seeded sweep otherwise);
+  * defrag preserves page contents bit-for-bit: the permutation the AK
+    merge-sort produces, applied as a device gather + block-table remap,
+    moves every allocated page's bytes intact;
+  * the paged engine is token-identical to the contiguous engine on the
+    PR-5 refill geometry (8 requests, 4 slots, mixed EOS retirement) and
+    on a skewed-length mix with defrag enabled;
+  * copy-on-write prefix reuse: identical prompts share prompt pages
+    (fewer fresh allocations than requests x prompt-pages), fork on first
+    divergent write, and still produce identical outputs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import load_smoke_config
+from repro.core import registry
+from repro.launch.engine import Engine, Request
+from repro.launch.paging import PagePool
+from repro.models import model as M
+
+# hypothesis is an optional test dep (same pattern as test_engine.py):
+# only the property sweeps need it — the allocator/engine tests must run
+# everywhere.
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised in minimal containers
+    given = None
+
+ARCH = "internlm2_1_8b"
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = load_smoke_config(ARCH)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+# ---------------------------------------------------------------------------
+# page_gather primitive: Pallas kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+
+
+def test_page_gather_backends_agree():
+    rng = np.random.default_rng(0)
+    P, ps, KV, hd, B, T = 12, 4, 2, 8, 3, 4
+    pages = jnp.asarray(rng.standard_normal((P, ps, KV, hd)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, P, (B, T)), jnp.int32)
+    ref = registry.call("page_gather", pages, bt, backend="jnp")
+    assert ref.shape == (B, T * ps, KV, hd)
+    got = registry.call("page_gather", pages, bt, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    # gather is pure indexing: rows of the output are exactly pool pages
+    np.testing.assert_array_equal(
+        np.asarray(ref).reshape(B, T, ps, KV, hd),
+        np.asarray(pages)[np.asarray(bt)],
+    )
+
+
+def test_page_size_is_a_registered_tunable():
+    prim = registry.get("page_gather")
+    assert "page_size" in prim.tunables
+    assert int(registry.tuning.lookup("page_gather")["page_size"]) >= 1
+
+
+# ---------------------------------------------------------------------------
+# allocator safety
+# ---------------------------------------------------------------------------
+
+
+def _run_ops(pool, ops):
+    """Drive a PagePool through an op tape, tracking every held reference
+    the way the engine does; checks no-double-allocation and
+    shared-never-freed at every step. Returns the held-reference list."""
+    held = []            # page ids, one entry per reference we hold
+    for kind, arg in ops:
+        if kind == "alloc":
+            want = arg % (pool.free_count() + 1)
+            got = pool.alloc(want)
+            assert len(got) == want
+            # no double allocation: every fresh page was free before
+            for p in got:
+                assert pool.refcount[p] == 1 or held.count(p) + 1 == \
+                    pool.refcount[p]
+            held.extend(got)
+        elif kind == "share" and held:
+            p = held[arg % len(held)]
+            pool.share(p)
+            held.append(p)
+        elif kind == "fork" and held:
+            p = held[arg % len(held)]
+            if pool.refcount[p] > 1 and pool.free_count() >= 1:
+                fresh = pool.fork(p)
+                assert fresh != p
+                held.remove(p)
+                held.append(fresh)
+                # the donor survives the fork — never freed while shared
+                assert pool.refcount[p] >= 1
+        elif kind == "release" and held:
+            p = held.pop(arg % len(held))
+            before = int(pool.refcount[p])
+            pool.release(p)
+            if before > 1:   # shared page: must NOT have been freed
+                assert pool.refcount[p] == before - 1 > 0
+        # every held reference is backed by exactly its refcount
+        for p in set(held):
+            assert int(pool.refcount[p]) == held.count(p)
+        pool.assert_conservation(held_refs=len(held))
+    return held
+
+
+def _op_tape(rng, n):
+    kinds = ("alloc", "share", "fork", "release")
+    return [(kinds[rng.integers(0, 4)], int(rng.integers(0, 64)))
+            for _ in range(n)]
+
+
+def test_allocator_seeded_op_sweep():
+    """Deterministic sweep that runs even without hypothesis."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        pool = PagePool(num_pages=16, page_size=4)
+        held = _run_ops(pool, _op_tape(rng, 60))
+        for p in held:          # full teardown returns every page
+            pool.release(p)
+        pool.assert_conservation(held_refs=0)
+        assert pool.free_count() == pool.num_pages
+
+
+if given is not None:
+    @given(ops=st.lists(
+        st.tuples(st.sampled_from(["alloc", "share", "fork", "release"]),
+                  st.integers(0, 63)),
+        min_size=1, max_size=80,
+    ))
+    @settings(max_examples=60, deadline=None)
+    def test_allocator_properties(ops):
+        pool = PagePool(num_pages=12, page_size=2)
+        held = _run_ops(pool, ops)
+        for p in held:
+            pool.release(p)
+        pool.assert_conservation(held_refs=0)
+
+
+def test_alloc_exhaustion_raises_and_leaves_pool_consistent():
+    pool = PagePool(num_pages=4, page_size=2)
+    got = pool.alloc(3)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(2)
+    pool.assert_conservation(held_refs=3)
+    assert pool.free_count() == 1
+    for p in got:
+        pool.release(p)
+    assert pool.free_count() == 4
+
+
+def test_shared_page_survives_release_and_fork():
+    pool = PagePool(num_pages=4, page_size=2)
+    (p,) = pool.alloc(1)
+    pool.register_key(p, ("k",))
+    pool.share(p)                       # two owners
+    fresh = pool.fork(p)                # one owner forks off
+    assert fresh != p
+    assert pool.refcount[p] == 1        # donor kept its last owner + key
+    assert pool.lookup(("k",)) == p
+    pool.release(p)                     # last owner lets go -> key evicted
+    assert pool.lookup(("k",)) is None
+    with pytest.raises(ValueError, match="free page"):
+        pool.release(p)
+    with pytest.raises(ValueError, match="only shared"):
+        pool.fork(fresh)
+    pool.release(fresh)
+    pool.assert_conservation(held_refs=0)
+
+
+# ---------------------------------------------------------------------------
+# defrag: AK-sorted permutation preserves contents bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def test_defrag_preserves_page_contents_bitwise():
+    """Simulate the engine's defrag against a host 'device pool': gather
+    the pool with the merge-sort permutation, remap ids with the inverse,
+    and check every allocated page's bytes moved intact — and that the
+    allocated pages ended up compacted at the front in stable order."""
+    rng = np.random.default_rng(3)
+    P, ps, D = 10, 4, 6
+    pool = PagePool(num_pages=P, page_size=ps)
+    device = rng.standard_normal((P, ps, D)).astype(np.float32)
+
+    ids = pool.alloc(7)
+    pool.register_key(ids[2], ("chain",))
+    for p in (ids[1], ids[4], ids[6]):   # fragment the free list
+        pool.release(p)
+    live = [p for p in ids if pool.refcount[p] > 0]
+    snapshot = {p: device[p].copy() for p in live}
+
+    perm = pool.defrag_order()
+    assert sorted(perm.tolist()) == list(range(P))   # a true permutation
+    new_device = device[perm]                        # the engine's gather
+    inv = pool.apply_perm(perm)
+
+    for old in live:
+        new = int(inv[old])
+        np.testing.assert_array_equal(new_device[new], snapshot[old])
+        assert pool.refcount[new] == 1
+    # compacted: allocated ids are now exactly the first len(live) slots,
+    # in their original (stable) relative order
+    assert sorted(int(inv[p]) for p in live) == list(range(len(live)))
+    assert [int(inv[p]) for p in live] == sorted(
+        int(inv[p]) for p in live)
+    assert pool.lookup(("chain",)) == int(inv[ids[2]])
+    pool.assert_conservation(held_refs=len(live))
+
+
+def test_occupancy_histogram_counts_sharing():
+    pool = PagePool(num_pages=8, page_size=2)
+    a, b, c = pool.alloc(3)
+    pool.share(b)
+    pool.share(c)
+    pool.share(c)
+    frac, hist = pool.occupancy(max_share=4)
+    assert frac == pytest.approx(3 / 8)
+    assert hist[0] == 5 and hist[1] == 1 and hist[2] == 1 and hist[3] == 1
+
+
+# ---------------------------------------------------------------------------
+# engine: paged == contiguous, token for token
+# ---------------------------------------------------------------------------
+
+
+REFILL_GEOM = dict(nreq=8, slots=4, plen=4, max_new=6, cache_len=16)
+
+
+def _run_engine(params, cfg, requests, *, eos=None, paged=False, seed=0,
+                **kw):
+    g = REFILL_GEOM
+    eng = Engine(params, cfg, slots=g["slots"], cache_len=g["cache_len"],
+                 prompt_pad=g["plen"], temperature=0.0, eos_id=eos,
+                 seed=seed, paged=paged, **kw)
+    results, stats = eng.run(requests)
+    return {r: results[r].tokens for r in results}, stats
+
+
+@pytest.fixture(scope="module")
+def refill_requests(model):
+    params, cfg = model
+    g = REFILL_GEOM
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (g["nreq"], g["plen"]), 0, cfg.vocab))
+    return [Request(rid=i, prompt=prompts[i], max_new=g["max_new"])
+            for i in range(g["nreq"])]
+
+
+def test_paged_engine_matches_contiguous_mixed_eos(model, refill_requests):
+    """The PR-5 acceptance geometry (8 requests, 4 slots) with an EOS
+    several references hit at different steps: paged mode must be
+    token-identical — test_engine.py already pins contiguous == the
+    sequential one-request-at-a-time reference, so equality here chains
+    the paged engine to that same reference."""
+    params, cfg = model
+    base, _ = _run_engine(params, cfg, refill_requests)
+    eos = base[0][2]    # an id emitted mid-stream -> mixed retirement
+    want, ws = _run_engine(params, cfg, refill_requests, eos=eos)
+    got, gs = _run_engine(params, cfg, refill_requests, eos=eos,
+                          paged=True, page_size=4)
+    assert got == want
+    assert gs.tokens == ws.tokens
+    assert len({len(t) for t in want.values()}) > 1   # genuinely mixed EOS
+    # the pool actually paged: pages were allocated and occupancy sampled
+    assert gs.pages_allocated_total > 0
+    assert gs.occupancy and max(gs.occupancy) > 0
+
+
+def test_paged_engine_skewed_lengths_with_defrag(model):
+    """Skewed mix — ragged prompt lengths AND per-request max_new — so
+    lanes retire at staggered steps, the free list fragments, and
+    defrag_every=1 actually permutes the pool mid-flight. Outputs must
+    still match the contiguous engine bit for bit, and the paged engine
+    must hold fewer resident bytes per active token."""
+    params, cfg = model
+    g = REFILL_GEOM
+    rng = np.random.default_rng(11)
+    reqs = [
+        Request(
+            rid=i,
+            prompt=np.asarray(rng.integers(
+                0, cfg.vocab, (int(rng.integers(1, g["plen"] + 1)),)),
+                np.int32),
+            max_new=int(rng.integers(2, g["max_new"] + 1)),
+        )
+        for i in range(g["nreq"])
+    ]
+    want, ws = _run_engine(params, cfg, reqs)
+    got, gs = _run_engine(params, cfg, reqs, paged=True, page_size=4,
+                          defrag_every=1)
+    assert got == want
+    assert gs.defrags > 0          # the permutation fired mid-flight
+    assert len({r.max_new for r in reqs}) > 1
+    # memory economics: mean resident bytes per live token strictly lower
+    assert (gs.resident_bytes_per_active_token
+            < ws.resident_bytes_per_active_token)
+
+
+def test_cow_prefix_reuse_shares_and_forks(model):
+    """Identical prompts: every page of requests 2..N is a prefix-cache
+    hit (refcount shares, no recompute), fresh allocations stay below the
+    naive requests x prompt-pages, the first divergent decode write forks,
+    and outputs are identical across the sharers.
+
+    The prompt length is deliberately NOT page-aligned (6 tokens, 4-token
+    pages): the shared last page is partial, so the very first decode
+    write lands inside it and must copy-on-write — a page-aligned prompt
+    would grow into a fresh page and never fork."""
+    params, cfg = model
+    nreq, ps, plen, max_new = 4, 4, 6, 6
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(5), (plen,), 0, cfg.vocab))
+    reqs = [Request(rid=i, prompt=prompt, max_new=max_new)
+            for i in range(nreq)]
+    eng = Engine(params, cfg, slots=nreq, cache_len=16, prompt_pad=plen,
+                 temperature=0.0, paged=True, page_size=ps)
+    results, gs = eng.run(reqs)
+    got = {r: results[r].tokens for r in results}
+    assert len({tuple(t) for t in got.values()}) == 1   # identical outputs
+    pages_per_prompt = -(-plen // ps)
+    assert gs.prefix_lookups == nreq * pages_per_prompt
+    assert gs.prefix_hits > 0
+    assert gs.cow_forks > 0
+    assert gs.prompt_pages_allocated < nreq * pages_per_prompt
+    assert gs.prefix_hit_rate > 0
+
+
+def test_paged_engine_requires_divisible_cache_len(model):
+    params, cfg = model
+    with pytest.raises(ValueError, match="multiple of"):
+        Engine(params, cfg, slots=2, cache_len=10, prompt_pad=4,
+               paged=True, page_size=4)
+
+
+def test_paged_pool_too_small_raises_not_hangs(model):
+    """A pool that cannot hold even the front request's pages must fail
+    loudly (deadlock guard), not spin forever."""
+    params, cfg = model
+    g = REFILL_GEOM
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(6), (g["plen"],), 0, cfg.vocab))
+    eng = Engine(params, cfg, slots=1, cache_len=g["cache_len"],
+                 prompt_pad=g["plen"], temperature=0.0, paged=True,
+                 page_size=4, num_pages=1)
+    with pytest.raises(RuntimeError, match="page pool"):
+        eng.run([Request(rid=0, prompt=prompt, max_new=g["max_new"])])
