@@ -211,9 +211,11 @@ def serving_table(json_path=None):
     sampler launches per decode step, slot utilisation, and — for entries
     recorded since the paged KV cache landed — the memory-economics
     columns (resident bytes per active token paged vs contiguous,
-    page-pool occupancy, prefix-reuse hit rate). Entries predating the
-    paged engine show '-'. Missing/invalid files degrade to a hint line,
-    never an error."""
+    page-pool occupancy, prefix-reuse hit rate) and the chaos-gate column
+    (injected faults / preemptions / retries / rejections / timeouts of
+    the scripted fault run). Entries predating the paged engine or the
+    fault-tolerance tier show '-'. Missing/invalid files degrade to a
+    hint line, never an error."""
     path = json_path or os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_serve.json",
@@ -224,8 +226,9 @@ def serving_table(json_path=None):
     lines = [
         "| arch | req/slots | tokens (EOS-aware / naive) | steps | "
         "launches/step fused vs unfused | slot util | tok/s (wallclock) | "
-        "resident B/token paged vs contig | occupancy | prefix hit rate |",
-        "|---|---|---|---|---|---|---|---|---|---|",
+        "resident B/token paged vs contig | occupancy | prefix hit rate | "
+        "chaos (faults/preempt/retry/reject/timeout) |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     try:
         with open(path) as f:
@@ -241,13 +244,19 @@ def serving_table(json_path=None):
             )
             occ = pg.get("mean_occupancy", "-")
             hit = (pg.get("prefix_reuse") or {}).get("hit_rate", "-")
+            ch = e.get("chaos") or {}
+            chaos = (
+                f"{ch.get('faults_injected')}/{ch.get('preemptions')}/"
+                f"{ch.get('step_retries')}/{ch.get('rejections')}/"
+                f"{ch.get('timeouts')}" if ch else "-"
+            )
             lines.append(
                 f"| {e.get('arch')} | {e.get('requests')}/{e.get('slots')} "
                 f"| {e.get('tokens_eos_aware')} / {e.get('tokens_naive')} | "
                 f"{e.get('decode_steps')} | "
                 f"{sl.get('fused')} vs {sl.get('unfused')} | "
                 f"{e.get('mean_slot_util')} | {wc.get('tok_s', '-')} | "
-                f"{mem} | {occ} | {hit} |"
+                f"{mem} | {occ} | {hit} | {chaos} |"
             )
     except (OSError, json.JSONDecodeError, KeyError, TypeError,
             AttributeError) as e:

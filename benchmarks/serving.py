@@ -24,6 +24,15 @@ Asserted here (and re-run by the CI ``serve-smoke`` + ``bench-smoke`` jobs):
   * **prefix-reuse gate** — identical prompts share prompt pages
     copy-on-write: strictly fewer fresh prompt-page allocations than
     ``requests x prompt_pages``, with hits and at least one COW fork.
+  * **chaos gate** — a scripted overload (more requests than the queue
+    cap, a hopeless deadline, an undersized page pool) plus a scripted
+    fault plan (injected decode/prefill/admission/allocator failures,
+    runtime/faults.py) through the preemption-enabled engine: preemptions
+    AND supervised retries actually fire, every request leaves with a
+    terminal status, every COMPLETED request's tokens are bitwise
+    identical to the fault-free contiguous reference, the page pool is
+    fully free at exit, and the whole run reproduces itself exactly when
+    repeated with a fresh copy of the same plan.
 
 The engine runs are greedy (temperature 0) on a smoke config so every
 number below is deterministic across machines; wall-clock tok/s is
@@ -172,6 +181,116 @@ def _paged_comparison(params, cfg, *, slots, requests, prompt_len,
     }
 
 
+def _chaos_gate(params, cfg, *, slots, prompt_len, max_new, cache_len):
+    """Scripted overload + fault mix through the fault-tolerance tier.
+    Returns the deterministic chaos sub-entry for the trajectory."""
+    from repro.launch.engine import (
+        COMPLETED,
+        REJECTED,
+        TERMINAL,
+        TIMED_OUT,
+        Engine,
+        Request,
+    )
+    from repro.launch.paging import PageExhausted
+    from repro.runtime import faults
+    from repro.runtime.supervisor import Supervisor
+
+    num_pages, queue_cap = 5, 4
+    rng = np.random.default_rng(1234)
+    # 8 requests: a 6-wide burst at step 0 (vs queue_cap=4), one mid-run
+    # arrival, one far-future arrival (exercises idle fast-forward);
+    # request 3 carries a deadline it cannot possibly make behind the
+    # burst. Skewed prompt lengths keep the page pool fragmented.
+    prompts = {
+        i: rng.integers(0, cfg.vocab, (1 + i % prompt_len,)).astype(np.int32)
+        for i in range(8)
+    }
+
+    def reqs(chaos):
+        rs = [Request(rid=i, prompt=prompts[i], max_new=max_new,
+                      deadline=(4 if chaos and i == 3 else None))
+              for i in range(6)]
+        rs.append(Request(rid=6, prompt=prompts[6], max_new=max_new,
+                          submit_step=2 if chaos else 0))
+        rs.append(Request(rid=7, prompt=prompts[7], max_new=max_new,
+                          submit_step=30 if chaos else 0))
+        return rs
+
+    # fault-free reference: the roomy contiguous engine, no limits —
+    # per-request rng (fold_in(seed, rid, idx)) makes its per-rid tokens
+    # THE truth for any schedule the chaos run ends up taking
+    ref, _ = Engine(params, cfg, slots=slots, cache_len=cache_len,
+                    prompt_pad=prompt_len, temperature=0.0).run(reqs(False))
+    want = {r: ref[r].tokens for r in ref}
+
+    def plan():
+        return faults.FaultPlan.scripted(
+            faults.Fault("engine.decode", 1),
+            faults.Fault("engine.decode", 7),
+            faults.Fault("engine.prefill", 2),
+            faults.Fault("pool.alloc", 4, PageExhausted("injected")),
+            faults.Fault("pool.alloc", 11),
+            faults.Fault("engine.admit", 3),
+        )
+
+    def chaos_run():
+        eng = Engine(
+            params, cfg, slots=slots, cache_len=cache_len,
+            prompt_pad=prompt_len, temperature=0.0,
+            paged=True, page_size=PAGE_SIZE, num_pages=num_pages,
+            preempt=True, queue_cap=queue_cap,
+            supervisor=Supervisor(None, n_hosts=1, max_retries=3,
+                                  sleep=lambda s: None),
+        )
+        with faults.active(plan()) as p:
+            res, st = eng.run(reqs(True))
+        # GATE: page-pool conservation at exit — every page provably
+        # released no matter how the request ended
+        eng.pool.assert_conservation(held_refs=0)
+        assert eng.pool.free_count() == num_pages
+        return {
+            "statuses": {str(r): res[r].status for r in sorted(res)},
+            "tokens": {r: list(map(int, res[r].tokens)) for r in sorted(res)},
+            "preemptions": int(st.preemptions),
+            "resumes": int(st.resumes),
+            "step_retries": int(st.step_retries),
+            "rejections": int(st.rejections),
+            "timeouts": int(st.timeouts),
+            "faults_injected": int(st.faults_injected),
+            "faults_fired": sorted(map(list, p.fired)),
+        }
+
+    a = chaos_run()
+    # GATE: deterministic — a second run under a FRESH copy of the same
+    # plan reproduces statuses, tokens and every counter exactly
+    assert a == chaos_run(), "chaos run is not deterministic"
+    sts = a["statuses"]
+    # GATE: the mix actually exercised the machinery, not a quiet pass
+    assert a["preemptions"] > 0 and a["resumes"] > 0, a
+    assert a["step_retries"] > 0, a
+    assert a["faults_injected"] > 0, a
+    # GATE: structured lifecycle — every request left terminal; overload
+    # surfaced as REJECTED/TIMED_OUT; nothing FAILED, nothing stuck
+    assert all(s in TERMINAL for s in sts.values()), sts
+    assert all(s in (COMPLETED, REJECTED, TIMED_OUT)
+               for s in sts.values()), sts
+    assert any(s == REJECTED for s in sts.values()), sts
+    assert any(s == TIMED_OUT for s in sts.values()), sts
+    # GATE: every ACCEPTED request completed with tokens bitwise identical
+    # to the fault-free reference — preemption, replay and retries are
+    # invisible in the output stream
+    completed = [r for r in a["tokens"] if sts[str(r)] == COMPLETED]
+    assert completed, sts
+    for r in completed:
+        assert a["tokens"][r] == list(map(int, want[r])), r
+
+    entry = {k: v for k, v in a.items() if k != "tokens"}
+    entry.update(num_pages=num_pages, queue_cap=queue_cap,
+                 completed=len(completed))
+    return entry
+
+
 def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
         prompt_len: int = 5, max_new: int = 6,
         json_path: str | None = BENCH_JSON):
@@ -235,6 +354,10 @@ def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
         params, cfg, slots=slots, requests=requests,
         prompt_len=prompt_len, max_new=max_new, cache_len=cache_len,
     )
+    chaos_entry = _chaos_gate(
+        params, cfg, slots=slots, prompt_len=prompt_len,
+        max_new=max_new, cache_len=cache_len,
+    )
 
     tok_s = stats.tokens_per_s
     entry = {
@@ -254,6 +377,7 @@ def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
         "sampler_launches": {"fused": fused, "unfused": unfused,
                              "b": COUNT_B, "v": COUNT_V},
         "paged": paged_entry,
+        "chaos": chaos_entry,
         # informational only — excluded from the skip-if-identical
         # compare. First-trace compile cost is split out of the steady
         # numbers: decode_s/prefill_s are steady state, tok_s is computed
@@ -296,6 +420,18 @@ def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
             f"defrags={paged_entry['defrags']} "
             f"prefix hits {pr['hits']}/{pr['lookups']} "
             f"forks={pr['cow_forks']}: PASS",
+        ),
+        (
+            "serve.chaos",
+            0.0,
+            f"faults={chaos_entry['faults_injected']} "
+            f"preempt={chaos_entry['preemptions']} "
+            f"resume={chaos_entry['resumes']} "
+            f"retries={chaos_entry['step_retries']} "
+            f"reject={chaos_entry['rejections']} "
+            f"timeout={chaos_entry['timeouts']} "
+            f"completed={chaos_entry['completed']} token-identical, "
+            f"pool conserved, deterministic replay: PASS",
         ),
     ]
 

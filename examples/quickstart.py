@@ -5,10 +5,16 @@ Algorithm 3 `foreachindex` copy kernel.
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --paged --page-size 4
+    PYTHONPATH=src python examples/quickstart.py --paged --chaos 7
 
 ``--paged`` appends a serving vignette: the block-pool paged KV cache
 (DESIGN.md §8a) decoding token-identically to the contiguous engine while
-holding fewer resident cache bytes per live token.
+holding fewer resident cache bytes per live token. ``--chaos SEED`` (with
+``--paged``) re-runs that vignette under a seeded fault plan with an
+undersized pool (DESIGN.md §9): injected failures are absorbed by
+supervised retries and preempt-and-recompute, and the surviving tokens
+still match the contiguous reference bit for bit. ``--deadline`` /
+``--queue-cap`` add the latency/admission bounds to the same run.
 """
 import argparse
 
@@ -22,6 +28,14 @@ _ap.add_argument("--paged", action="store_true",
                  help="also run the paged-KV-cache serving vignette")
 _ap.add_argument("--page-size", type=int, default=4,
                  help="tokens per KV page for the vignette")
+_ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                 help="re-run the paged vignette under a seeded fault "
+                      "plan (implies preemption + supervised retries)")
+_ap.add_argument("--deadline", type=int, default=None,
+                 help="per-request deadline (engine steps) for the "
+                      "chaos vignette")
+_ap.add_argument("--queue-cap", type=int, default=None,
+                 help="bounded admission queue for the chaos vignette")
 _args = _ap.parse_args()
 
 rng = np.random.default_rng(0)
@@ -120,3 +134,33 @@ if _args.paged:
           f"{st.num_pages} pages x {ps}, "
           f"occupancy {st.mean_occupancy:.2f}, "
           f"{st.resident_bytes_per_active_token:.0f} B/active token")
+
+    # -- failure tier: chaos the same batch (DESIGN.md §9) ------------------
+    # seeded fault plan + undersized pool: injected allocator/admission/
+    # device-step failures get absorbed by supervised retries and
+    # preempt-and-recompute; completed requests still match the
+    # contiguous reference bit for bit.
+    if _args.chaos is not None:
+        from repro.launch.engine import COMPLETED
+        from repro.runtime import faults
+        from repro.runtime.supervisor import Supervisor
+
+        eng = Engine(params, cfg, slots=2, cache_len=cache_len,
+                     prompt_pad=plen, temperature=0.0, paged=True,
+                     page_size=ps, num_pages=2 * (cache_len // ps),
+                     preempt=True, queue_cap=_args.queue_cap,
+                     supervisor=Supervisor(None, n_hosts=1, max_retries=3,
+                                           sleep=lambda s: None))
+        with faults.active(faults.FaultPlan.seeded(_args.chaos)) as plan:
+            res, cst = eng.run([
+                Request(rid=i, prompt=prompts[i], max_new=max_new,
+                        deadline=_args.deadline)
+                for i in range(4)
+            ])
+        done = [r for r in res if res[r].status == COMPLETED]
+        assert all(res[r].tokens == contig[r] for r in done)
+        print(f"chaos (seed {_args.chaos}) : "
+              f"{len(done)}/4 completed token-identical; "
+              f"faults={plan.injected} preempt={cst.preemptions} "
+              f"retries={cst.step_retries} "
+              f"statuses={sorted(res[r].status for r in res)}")

@@ -6,10 +6,19 @@ primitives on the serving hot path.
 
     PYTHONPATH=src python examples/serve_llm.py
     PYTHONPATH=src python examples/serve_llm.py --paged --page-size 8
+    PYTHONPATH=src python examples/serve_llm.py --paged --chaos 7 \\
+        --deadline 80 --queue-cap 6
 
 ``--paged`` swaps the per-slot contiguous KV rows for the block-pool
 paged cache (DESIGN.md §8a): same tokens bit for bit, but resident cache
 bytes track what lanes actually hold instead of the worst case.
+
+``--chaos SEED`` runs the same batch under a seeded fault plan
+(DESIGN.md §9): injected allocator/admission/device-step failures,
+absorbed by supervised retries and preempt-and-recompute — per-request
+outcomes print as structured statuses. ``--deadline`` (engine steps) and
+``--queue-cap`` bound latency and admission the same way a production
+front-end would.
 """
 import argparse
 
@@ -27,6 +36,14 @@ ap.add_argument("--page-size", type=int, default=None,
                      "primitive's tuned knob)")
 ap.add_argument("--num-pages", type=int, default=None,
                 help="page-pool size (default: full footprint)")
+ap.add_argument("--deadline", type=int, default=None,
+                help="per-request deadline in engine steps; late requests "
+                     "retire TIMED_OUT")
+ap.add_argument("--queue-cap", type=int, default=None,
+                help="bounded admission queue; overflow is REJECTED")
+ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                help="seeded fault injection with supervised retries and "
+                     "preemption (same seed, same faults)")
 args = ap.parse_args()
 
 cfg = load_smoke_config("internlm2_1_8b")
@@ -41,10 +58,19 @@ toks, stats = serve_loop(
     max_new=max_new, cache_len=S_prompt + max_new,
     temperature=0.8, top_k=50, top_p=0.95,
     paged=args.paged, page_size=args.page_size, num_pages=args.num_pages,
+    deadline=args.deadline, queue_cap=args.queue_cap, chaos=args.chaos,
 )
 mode = "paged" if args.paged else "contiguous"
 print(f"batch={B} prompt={S_prompt} generated={max_new}/seq ({mode})")
 print(f"prefill: {stats.prefill_s*1e3:.1f} ms")
 print(f"decode : {stats.tokens_per_s:.1f} tok/s "
       f"({stats.decode_s*1e3:.1f} ms total)")
+if args.chaos is not None or args.deadline or args.queue_cap:
+    es = stats.engine_stats
+    from collections import Counter
+    sts = Counter(stats.statuses.values())
+    print("chaos  : " + " ".join(f"{k}={v}" for k, v in sorted(sts.items()))
+          + f"; injected={es.faults_injected} preempt={es.preemptions} "
+            f"retries={es.step_retries} rejected={es.rejections} "
+            f"timed_out={es.timeouts}")
 print(f"sample of generations (token ids):\n{toks[:2]}")

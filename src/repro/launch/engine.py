@@ -78,15 +78,32 @@ import numpy as np
 
 from repro.core import registry
 from repro.kernels import common as KC
-from repro.launch.paging import PagePool
+from repro.launch.paging import PageExhausted, PagePool
 from repro.models import model as M
-from repro.runtime.supervisor import StragglerMonitor, Supervisor
+from repro.runtime import faults
+from repro.runtime.supervisor import (
+    NodeLossError,
+    StragglerMonitor,
+    Supervisor,
+)
 
 #: Families the slot scheduler supports (per-slot positions + slot-indexed
 #: cache refill). encdec/vlm need per-request encoder/vision features wired
 #: through slot_prefill's xkv scatter — they route through the fixed-batch
 #: compat loop in launch/serve.py instead.
 ENGINE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+# -- request status lifecycle (RequestResult.status) -------------------------
+# PENDING is the only non-terminal state; every request handed to
+# ``Engine.run`` leaves with exactly one terminal status, and a terminal
+# request holds zero pool pages (asserted under ``__debug__``).
+PENDING = "PENDING"        # queued or decoding (transient)
+COMPLETED = "COMPLETED"    # finished normally: EOS or max_new budget
+REJECTED = "REJECTED"      # backpressure: bounded queue overflowed
+TIMED_OUT = "TIMED_OUT"    # deadline expired (queued or mid-decode)
+FAILED = "FAILED"          # unrecoverable: node loss or impossible admission
+PREEMPTED = "PREEMPTED"    # evicted more than max_preemptions times
+TERMINAL = (COMPLETED, REJECTED, TIMED_OUT, FAILED, PREEMPTED)
 
 
 # Module-level jits (cfg is a hashable frozen dataclass -> a static arg):
@@ -144,19 +161,25 @@ def _keys_jit(rids, idxs, *, seed):
 
 @dataclasses.dataclass
 class Request:
-    """One serving request: a prompt and a generation budget."""
+    """One serving request: a prompt, a generation budget, and (optionally)
+    a deadline + scripted arrival for the fault-tolerance tier."""
 
     rid: int
     prompt: np.ndarray          # (len,) int32, 0 < len <= engine prompt_pad
     max_new: int = 32
+    deadline: int | None = None  # must finish within this many engine steps
+    #                              of submission (else status TIMED_OUT)
+    submit_step: int = 0         # engine step at which the request arrives
 
 
 @dataclasses.dataclass
 class RequestResult:
     rid: int
     tokens: list                 # generated ids, truncated at EOS (incl.)
-    admitted_step: int           # engine step count at admission
+    admitted_step: int = -1      # engine step at FIRST admission (-1: never)
     finished_step: int = -1
+    status: str = PENDING        # terminal member of TERMINAL after run()
+    preemptions: int = 0         # times evicted + re-queued for recompute
 
     @property
     def latency_steps(self) -> int:
@@ -204,6 +227,15 @@ class EngineStats:
     occupancy: list = dataclasses.field(default_factory=list)
     resident_bytes: list = dataclasses.field(default_factory=list)
     active_tokens: list = dataclasses.field(default_factory=list)
+    # -- fault-tolerance accounting ---------------------------------------
+    preemptions: int = 0         # evictions into the recompute queue
+    resumes: int = 0             # replay-prefills of evicted requests
+    rejections: int = 0          # backpressure (queue_cap) rejections
+    timeouts: int = 0            # deadline expiries (queued or live)
+    failures: int = 0            # FAILED retirements (node loss etc.)
+    step_retries: int = 0        # supervised device-step retries this run
+    faults_injected: int = 0     # injected faults observed this run
+    node_loss: str = ""          # non-empty: run degraded on NodeLossError
 
     @property
     def tokens_per_s(self) -> float:
@@ -243,7 +275,10 @@ class Engine:
                  paged: bool = False, page_size: int | None = None,
                  num_pages: int | None = None, defrag_every: int = 0,
                  monitor: StragglerMonitor | None = None,
-                 supervisor: Supervisor | None = None):
+                 supervisor: Supervisor | None = None,
+                 preempt: bool = False, max_preemptions: int = 8,
+                 queue_cap: int | None = None,
+                 preempt_script: dict | None = None, host: int = 0):
         if cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
                 f"family {cfg.family!r} not engine-schedulable (supported: "
@@ -264,7 +299,30 @@ class Engine:
         self.overlap = overlap
         self.ak_tuning = ak_tuning
         self.monitor = monitor if monitor is not None else StragglerMonitor(1)
-        self.supervisor = supervisor
+        # every decode/prefill dispatch routes through Supervisor.run_step
+        # (transient step failures retry with backoff instead of aborting
+        # the whole batch); a caller-supplied supervisor brings its own
+        # retry budget / sleep / clock for testing
+        self.supervisor = (
+            supervisor if supervisor is not None
+            else Supervisor(None, n_hosts=1)
+        )
+        self.host = host
+        # -- failure-handling policy --------------------------------------
+        # preempt=True turns pool exhaustion from a crash into an eviction:
+        # the least-progress lane releases its pages and re-enqueues to
+        # replay prompt + generated-so-far through the prefill path —
+        # per-request rng (fold_in(seed, rid, idx)) makes the resumed
+        # continuation token-identical, so preemption is invisible in the
+        # output stream.
+        self.preempt = preempt
+        self.max_preemptions = max_preemptions
+        self.queue_cap = queue_cap
+        self.preempt_script = preempt_script  # {engine step: rid(s)} —
+        #                                       deterministic evictions for
+        #                                       tests and the chaos gate
+        self.pool: PagePool | None = None     # last run's pool (gates
+        #                                       assert conservation on it)
 
         self._decode = functools.partial(_decode_jit, cfg=cfg)
         self._prefill = functools.partial(
@@ -345,10 +403,28 @@ class Engine:
         with more requests than slots — finished slots refill from the
         queue in admission order, live neighbours undisturbed."""
         cfg, B = self.cfg, self.slots
-        queue = deque(Request(r.rid, np.asarray(r.prompt, np.int32),
-                              r.max_new) for r in requests)
+        # scripted arrivals: requests enter the queue when the step clock
+        # reaches their submit_step (default 0 = all up front, the
+        # historical behaviour); sort is stable so same-step requests keep
+        # caller order
+        arrivals = deque(sorted(
+            (Request(r.rid, np.asarray(r.prompt, np.int32), r.max_new,
+                     deadline=r.deadline, submit_step=r.submit_step)
+             for r in requests),
+            key=lambda r: r.submit_step,
+        ))
+        queue: deque = deque()
+        # evicted requests carrying their replay (generated-so-far) —
+        # exempt from queue_cap (they were already accepted) and admitted
+        # ahead of fresh requests so preempted work finishes first
+        resume_q: deque = deque()
+        req_by_rid: dict[int, Request] = {}
+        script = dict(self.preempt_script or {})
         results: dict[int, RequestResult] = {}
         stats = EngineStats()
+        rt0 = self.supervisor.retries_total
+        plan = faults.current()
+        f0 = plan.injected if plan is not None else 0
 
         if self.paged:
             caches = M.zero_paged_caches(
@@ -365,6 +441,7 @@ class Engine:
             caches = M.zero_caches(cfg, batch=B, cache_len=self.cache_len)
             pool = None
             bt = held = None
+        self.pool = pool
         cur_tok = jnp.zeros((B, 1), jnp.int32)
         pos = np.full((B,), self.cache_len, np.int32)   # parked lanes
         slot_rid: list = [None] * B                     # host slot map
@@ -383,116 +460,218 @@ class Engine:
                 emitted[rid] >= budget[rid]
             )
 
-        def admit(slot) -> bool:
-            """Pop a request into ``slot``; returns True if the slot is
-            live afterwards (False: the request retired on its very first
-            token — EOS immediately or max_new == 1)."""
+        def finish(rid, status, step_no):
+            """Terminal transition for an ADMITTED request."""
+            retired[rid] = True
+            results[rid].status = status
+            results[rid].finished_step = step_no
+            if status == TIMED_OUT:
+                stats.timeouts += 1
+            elif status == FAILED:
+                stats.failures += 1
+
+        def terminal_unadmitted(req, status):
+            """Terminal transition for a request that never (re)entered a
+            slot — rejected, expired in the queue, or failed on node
+            loss. A preempted request keeps its partial tokens."""
+            res = results.get(req.rid)
+            if res is None:
+                res = results[req.rid] = RequestResult(rid=req.rid,
+                                                       tokens=[])
+            res.status = status
+            res.finished_step = stats.steps
+            retired[req.rid] = True
+            if status == REJECTED:
+                stats.rejections += 1
+            elif status == TIMED_OUT:
+                stats.timeouts += 1
+            elif status == FAILED:
+                stats.failures += 1
+
+        def supervised(site, fn, *a):
+            """Dispatch a device step through the Supervisor with the
+            fault-injection site checked BEFORE the jit call — nothing is
+            donated yet when an injected fault fires, so a retry replays
+            the step exactly."""
+            def step():
+                faults.check(site)
+                return fn(*a)
+            return self.supervisor.run_step(step_fn=step, host=self.host)
+
+        def admit(slot, req, replay=None) -> bool:
+            """Prefill ``req`` into ``slot``; with ``replay`` (the tokens
+            a preempted request generated before eviction) the chain
+            prompt + replay[:-1] prefills and decoding resumes at token
+            index len(replay) — per-request rng makes the continuation
+            token-identical to the uninterrupted run. Returns True if the
+            slot is live afterwards (False: the request retired on its
+            very first token). On failure NOTHING stays acquired: pages
+            shared/allocated before the fault are released (the prefix
+            index unwinds with them)."""
             nonlocal caches, cur_tok
-            req = queue.popleft()
+            faults.check("engine.admit")
             plen = int(req.prompt.shape[0])
             if not 0 < plen <= self.prompt_pad:
                 raise ValueError(
                     f"request {req.rid}: prompt len {plen} not in "
                     f"(0, {self.prompt_pad}]"
                 )
+            rid = req.rid
+            # the token chain the cache must hold BEFORE the next decode:
+            # the prompt, plus (resuming) everything generated except the
+            # last token — that one is the next decode step's input
+            chain = (req.prompt if replay is None else
+                     np.concatenate([req.prompt,
+                                     np.asarray(replay[:-1], np.int32)]))
+            clen = int(chain.shape[0])
             t0 = time.perf_counter()
             if self._pad_prompts:
-                tok_in = np.zeros((1, self.prompt_pad), np.int32)
-                tok_in[0, :plen] = req.prompt
+                # fresh prompts pad to prompt_pad (ONE prefill trace: pad
+                # K/V is overwritten or causally masked); resumed chains
+                # can exceed it — those pad to cache_len (one more trace,
+                # shared by every resume)
+                pad_to = self.prompt_pad if replay is None else \
+                    self.cache_len
+                tok_in = np.zeros((1, pad_to), np.int32)
+                tok_in[0, :clen] = chain
             else:
-                tok_in = req.prompt[None, :]
+                tok_in = chain[None, :]
             if self.paged:
-                # prompt pages: exact-token-chain lookup first (a hit
+                # chain pages: exact-token-chain lookup first (a hit
                 # SHARES the resident page — its K/V is determined by the
                 # chain under causal masking + absolute RoPE), allocate
-                # only misses; page_vec keeps the static ceil(prompt_pad /
-                # page_size) length with the don't-write sentinel in
-                # shared and beyond-prompt slots so one prefill trace
-                # serves every admission.
-                n_pp = KC.ceil_div(plen, ps)
-                page_vec = np.full((KC.ceil_div(self.prompt_pad, ps),),
+                # only misses; page_vec keeps a static length per trace
+                # with the don't-write sentinel in shared and beyond-chain
+                # slots.
+                n_pp = KC.ceil_div(clen, ps)
+                page_vec = np.full((KC.ceil_div(tok_in.shape[1], ps),),
                                    self.num_pages, np.int32)
                 row = np.full((self.table_len,), self.num_pages, np.int32)
-                rid_pages = []
-                for i in range(n_pp):
-                    end = min((i + 1) * ps, plen)
-                    key = tuple(int(t) for t in req.prompt[:end])
-                    stats.prefix_lookups += 1
-                    hit = pool.lookup(key)
-                    if hit is not None:
-                        pool.share(hit)
-                        stats.prefix_hits += 1
-                        row[i] = hit
-                    else:
-                        pg = pool.alloc(1)[0]
-                        pool.register_key(pg, key)
-                        row[i] = pg
-                        page_vec[i] = pg
-                        stats.prompt_pages_allocated += 1
-                    rid_pages.append(int(row[i]))
-                bt[slot] = row
-                held[req.rid] = rid_pages
-                stats.pages_allocated_total = pool.allocs_total
-                logits, caches = self._prefill_paged(
-                    self.params, jnp.asarray(tok_in), caches,
-                    jnp.asarray(page_vec)
-                )
-            else:
-                logits, caches = self._prefill(
-                    self.params, jnp.asarray(tok_in), caches, slot
-                )
-            key0 = self._keys(np.asarray([req.rid], np.int32),
-                              np.asarray([0], np.int32))
-            tok0 = self._sample(key0, logits[:, plen - 1])
-            rid = req.rid
-            # token i >= 1 is decoded with input token i-1 written at cache
-            # column plen + i - 1; the last input must stay in-cache
-            budget[rid] = min(req.max_new, self.cache_len + 1 - plen)
-            emitted[rid] = 0
-            next_idx[rid] = 1
-            retired[rid] = False
-            results[rid] = RequestResult(rid=rid, tokens=[],
-                                         admitted_step=stats.steps)
-            stats.prefills += 1
-            t = int(tok0[0])            # sync — prefill is per-request
-            dt = time.perf_counter() - t0
-            if stats.prefills == 1:
-                stats.compile_prefill_s = dt   # trace+compile dominated
-            else:
-                stats.prefill_s += dt
-            results[rid].tokens.append(t)
-            emitted[rid] = 1
-            stats.tokens += 1
-            if retire_check(rid, t):
-                results[rid].finished_step = stats.steps
-                retired[rid] = True
-                if self.paged:     # retired on its first token: give the
-                    for pg in held.pop(rid, []):     # pages straight back
+                acquired: list[int] = []
+                try:
+                    for i in range(n_pp):
+                        end = min((i + 1) * ps, clen)
+                        key = tuple(int(t) for t in chain[:end])
+                        stats.prefix_lookups += 1
+                        hit = pool.lookup(key)
+                        if hit is not None:
+                            pool.share(hit)
+                            stats.prefix_hits += 1
+                            row[i] = hit
+                        else:
+                            pg = pool.alloc(1)[0]
+                            pool.register_key(pg, key)
+                            row[i] = pg
+                            page_vec[i] = pg
+                            stats.prompt_pages_allocated += 1
+                        acquired.append(int(row[i]))
+                    logits, caches = supervised(
+                        "engine.prefill", self._prefill_paged,
+                        self.params, jnp.asarray(tok_in), caches,
+                        jnp.asarray(page_vec))
+                except BaseException:
+                    # leak-free unwinding: a partial admission (prefix
+                    # pages shared, tail alloc or the prefill itself
+                    # failed) hands every acquired reference back
+                    for pg in acquired:
                         pool.release(pg)
-                    bt[slot] = self.num_pages
-                return False
-            cur_tok = cur_tok.at[slot, 0].set(tok0[0])
+                    raise
+                bt[slot] = row
+                held[rid] = acquired
+                stats.pages_allocated_total = pool.allocs_total
+            else:
+                logits, caches = supervised(
+                    "engine.prefill", self._prefill,
+                    self.params, jnp.asarray(tok_in), caches, slot)
+            stats.prefills += 1
+            if replay is None:
+                key0 = self._keys(np.asarray([rid], np.int32),
+                                  np.asarray([0], np.int32))
+                tok0 = self._sample(key0, logits[:, plen - 1])
+                # token i >= 1 is decoded with input token i-1 written at
+                # cache column plen + i - 1; the last input stays in-cache
+                budget[rid] = min(req.max_new, self.cache_len + 1 - plen)
+                emitted[rid] = 0
+                next_idx[rid] = 1
+                retired[rid] = False
+                results[rid] = RequestResult(rid=rid, tokens=[],
+                                             admitted_step=stats.steps)
+                t = int(tok0[0])        # sync — prefill is per-request
+                dt = time.perf_counter() - t0
+                if stats.prefills == 1:
+                    stats.compile_prefill_s = dt  # trace+compile heavy
+                else:
+                    stats.prefill_s += dt
+                results[rid].tokens.append(t)
+                emitted[rid] = 1
+                stats.tokens += 1
+                if retire_check(rid, t):
+                    finish(rid, COMPLETED, stats.steps)
+                    if self.paged:  # retired on its first token: give the
+                        for pg in held.pop(rid, []):  # pages straight back
+                            pool.release(pg)
+                        bt[slot] = self.num_pages
+                    return False
+                cur_tok = cur_tok.at[slot, 0].set(tok0[0])
+                pos[slot] = plen
+            else:
+                # resume: no sampling — the next decode step consumes the
+                # last generated token at column clen (= plen + k - 1) and
+                # samples token index k, exactly where the eviction cut in
+                k = len(replay)
+                jax.block_until_ready(logits)
+                dt = time.perf_counter() - t0
+                if stats.prefills == 1:
+                    stats.compile_prefill_s = dt
+                else:
+                    stats.prefill_s += dt
+                emitted[rid] = k
+                next_idx[rid] = k
+                retired[rid] = False
+                stats.resumes += 1
+                cur_tok = cur_tok.at[slot, 0].set(int(replay[-1]))
+                pos[slot] = clen
             slot_rid[slot] = rid
-            pos[slot] = plen
             return True
 
-        def can_admit(req) -> bool:
+        def can_admit(req, replay=None) -> bool:
             """Paged admission gate: defer while the pool cannot cover the
-            request's prompt pages (all assumed fresh — prefix hits only
+            request's chain pages (all assumed fresh — prefix hits only
             help) plus one page of decode headroom. Deferred requests wait
             for retirements to release pages back."""
             if not self.paged:
                 return True
-            need = KC.ceil_div(int(req.prompt.shape[0]), ps) + 1
+            clen = int(req.prompt.shape[0]) + (
+                len(replay) - 1 if replay else 0)
+            need = KC.ceil_div(clen, ps) + 1
             return pool.free_count() >= need
 
-        def admit_free_slots():
+        def admit_free_slots() -> bool:
+            """Fill free slots: resumes first (they were already accepted
+            and carry finished work), then fresh requests in arrival
+            order. Returns True iff a transient/injected admission fault
+            stopped progress — the request stays at the head of its queue
+            for the next attempt."""
             for b in range(B):
-                while slot_rid[b] is None and queue:
-                    if not can_admit(queue[0]):
-                        return
-                    if admit(b):
+                while slot_rid[b] is None and (resume_q or queue):
+                    if resume_q:
+                        req, replay = resume_q[0]
+                        src = resume_q
+                    else:
+                        req, replay = queue[0], None
+                        src = queue
+                    if not can_admit(req, replay):
+                        return False
+                    try:
+                        ok = admit(b, req, replay)
+                    except (faults.InjectedFault, PageExhausted):
+                        # transient: nothing stayed acquired (admit
+                        # unwound); same request retries next pass
+                        return True
+                    src.popleft()
+                    if ok:
                         break  # slot is live; next free slot
+            return False
 
         def bookkeep(toks_host, snapshot, step_no):
             """Record one fetched step; returns freed slot indices."""
@@ -506,8 +685,7 @@ class Engine:
                 emitted[rid] += 1
                 stats.tokens += 1
                 if retire_check(rid, tok):
-                    results[rid].finished_step = step_no
-                    retired[rid] = True
+                    finish(rid, COMPLETED, step_no)
                     freed.append(b)
             return freed
 
@@ -529,71 +707,266 @@ class Engine:
             stats.defrags += 1
 
         retires_since_defrag = 0
-        t_run = time.perf_counter()
-        admit_free_slots()
 
-        while True:
-            live = [b for b in range(B) if slot_rid[b] is not None
+        def drain(keep=0):
+            """Fetch + bookkeep deferred steps down to ``keep`` entries.
+            Eviction call sites drain to 0 first so a victim's replay
+            (tokens + emitted counts) is current when it re-queues."""
+            nonlocal retires_since_defrag
+            while len(pending) > keep:
+                t0 = time.perf_counter()
+                toks_dev, snapshot, step_no = pending.popleft()
+                freed = bookkeep(np.asarray(toks_dev), snapshot, step_no)
+                for b in freed:
+                    rid_f = snapshot[b]
+                    slot_rid[b] = None
+                    pos[b] = self.cache_len
+                    if self.paged:
+                        # incremental release: the pages go back the
+                        # moment THIS request retires, not when the slot
+                        # is eventually refilled
+                        for pg in held.pop(rid_f, []):
+                            pool.release(pg)
+                        bt[b] = self.num_pages
+                if self.paged and self.defrag_every and freed:
+                    retires_since_defrag += len(freed)
+                    if retires_since_defrag >= self.defrag_every:
+                        do_defrag()
+                        retires_since_defrag = 0
+                self.monitor.record(0, time.perf_counter() - t0)
+                self.supervisor.beat(self.host)
+
+        def evict(b, status=None):
+            """Release lane ``b``'s slot + pages. ``status=None`` is a
+            PREEMPTION: the request re-queues with its generated-so-far
+            replay (or retires PREEMPTED past max_preemptions); any other
+            status is terminal (TIMED_OUT/FAILED, partial tokens kept).
+            Callers drain(0) first — the replay must include every token
+            the device already produced."""
+            rid = slot_rid[b]
+            res = results[rid]
+            slot_rid[b] = None
+            pos[b] = self.cache_len
+            retired[rid] = True      # re-admission flips it back
+            if self.paged:
+                for pg in held.pop(rid, []):
+                    pool.release(pg)
+                bt[b] = self.num_pages
+            if status is not None:
+                finish(rid, status, stats.steps)
+                return
+            res.preemptions += 1
+            stats.preemptions += 1
+            if res.preemptions > self.max_preemptions:
+                finish(rid, PREEMPTED, stats.steps)
+            else:
+                resume_q.append((req_by_rid[rid], list(res.tokens)))
+
+        def victim():
+            """Preemption policy: least progress first — fewest emitted
+            tokens (least work to replay), youngest admission breaking
+            ties (older requests are closer to their deadlines)."""
+            cands = [b for b in range(B)
+                     if slot_rid[b] is not None
+                     and not retired[slot_rid[b]]]
+            if not cands:
+                return None
+            return min(cands, key=lambda b: (
+                emitted[slot_rid[b]],
+                -results[slot_rid[b]].admitted_step,
+                -slot_rid[b],
+            ))
+
+        def reclaim_for(b) -> bool:
+            """Free at least one page so lane ``b`` can grow: drain first
+            (a deferred retirement may already have released enough), then
+            preempt least-progress victims — possibly ``b`` itself.
+            Returns True iff ``b`` is still live AND a page is free."""
+            drain(0)
+            while (slot_rid[b] is not None and not retired[slot_rid[b]]
+                   and pool.free_count() < 1):
+                v = victim()
+                if v is None:
+                    return False
+                evict(v)
+            return (slot_rid[b] is not None
+                    and not retired[slot_rid[b]]
+                    and pool.free_count() >= 1)
+
+        def deadline_expired(req) -> bool:
+            return (req.deadline is not None
+                    and stats.steps - req.submit_step >= req.deadline)
+
+        def ingest():
+            """Move due arrivals into the queue, then enforce the
+            backpressure bound: newest requests reject first (they have
+            the least chance of meeting any deadline) with a structured
+            REJECTED status instead of an exception."""
+            while arrivals and arrivals[0].submit_step <= stats.steps:
+                req = arrivals.popleft()
+                req_by_rid[req.rid] = req
+                queue.append(req)
+            if self.queue_cap is not None:
+                while len(queue) > self.queue_cap:
+                    terminal_unadmitted(queue.pop(), REJECTED)
+
+        def expire():
+            """Deadline sweep: queued requests expire in place; live
+            lanes drain + evict with TIMED_OUT (partial tokens kept);
+            preempted requests waiting to resume expire out of
+            resume_q."""
+            for q, unpack in ((queue, lambda e: e),
+                              (resume_q, lambda e: e[0])):
+                stale = [e for e in q if deadline_expired(unpack(e))]
+                for e in stale:
+                    q.remove(e)
+                    terminal_unadmitted(unpack(e), TIMED_OUT)
+            late = [b for b in range(B)
+                    if slot_rid[b] is not None
+                    and not retired[slot_rid[b]]
+                    and deadline_expired(req_by_rid[slot_rid[b]])]
+            if late:
+                drain(0)
+                for b in late:
+                    if (slot_rid[b] is not None
+                            and not retired[slot_rid[b]]):
+                        evict(b, TIMED_OUT)
+
+        def alive():
+            return [b for b in range(B) if slot_rid[b] is not None
                     and not retired[slot_rid[b]]]
-            if not live and not pending:
-                if queue:           # every admitted request insta-retired
-                    qlen = len(queue)    # ...or waiting on pool pages
-                    admit_free_slots()
-                    if len(queue) == qlen and all(
-                        r is None for r in slot_rid
-                    ):
-                        raise RuntimeError(
-                            f"page pool too small: request "
-                            f"{queue[0].rid} needs "
-                            f"{KC.ceil_div(len(queue[0].prompt), ps) + 1} "
-                            f"pages, {pool.free_count()}/{self.num_pages} "
-                            f"free with nothing left to retire"
-                        )
-                    continue
-                break
 
-            if live:
-                snapshot = list(slot_rid)
-                step_no = stats.steps
-                first_step = stats.steps == 0
-                t_step = time.perf_counter()
-                if self.paged:
+        t_run = time.perf_counter()
+        try:
+            while True:
+                ingest()
+                expire()
+                live = alive()
+                if not live and not pending:
+                    if resume_q or queue:
+                        # every admitted request insta-retired, or the
+                        # head is waiting on pool pages / faulting
+                        qlen = len(queue) + len(resume_q)
+                        admit_faulted = admit_free_slots()
+                        if (len(queue) + len(resume_q) == qlen
+                                and all(r is None for r in slot_rid)):
+                            if admit_faulted:
+                                continue   # transient; plans are finite
+                            if resume_q:
+                                head, replay = resume_q[0]
+                            else:
+                                head, replay = queue[0], None
+                            need = (KC.ceil_div(
+                                len(head.prompt)
+                                + (len(replay) - 1 if replay else 0),
+                                ps) + 1) if self.paged else 0
+                            if self.preempt:
+                                # structurally impossible admission:
+                                # retire the head with a status instead
+                                # of crashing the whole server
+                                (resume_q if replay is not None
+                                 else queue).popleft()
+                                terminal_unadmitted(head, FAILED)
+                                continue
+                            raise RuntimeError(
+                                f"page pool too small: request "
+                                f"{head.rid} needs {need} pages, "
+                                f"{pool.free_count()}/{self.num_pages} "
+                                f"free with nothing left to retire"
+                            )
+                        continue
+                    if arrivals:
+                        # idle until the next scripted arrival: nothing
+                        # to decode, so fast-forward the step clock
+                        stats.steps = max(stats.steps,
+                                          arrivals[0].submit_step)
+                        continue
+                    break
+
+                if live and script:
+                    # scripted (deterministic) preemptions — the chaos
+                    # gate and the resume-determinism tests drive the
+                    # eviction path at exact step offsets
+                    hits = script.pop(stats.steps, None)
+                    if hits is not None:
+                        for rv in (hits if isinstance(hits, (list, tuple))
+                                   else [hits]):
+                            b = next((i for i in range(B)
+                                      if slot_rid[i] == rv
+                                      and not retired.get(rv, True)),
+                                     None)
+                            if b is not None:
+                                drain(0)
+                                evict(b)
+                        live = alive()
+
+                if live and self.paged:
                     # back the column each live lane writes THIS step:
                     # grow into an unbacked table slot, or fork a shared
-                    # page (copy-on-write) so co-owners never see the write
-                    for b in live:
+                    # page (copy-on-write) so co-owners never see the
+                    # write; under preemption, exhaustion evicts the
+                    # least-progress lane instead of raising
+                    for b in list(live):
+                        if (slot_rid[b] is None
+                                or retired.get(slot_rid[b], True)):
+                            continue   # evicted/retired by a reclaim
                         p_next = int(pos[b])
                         if p_next >= self.cache_len:
                             continue
                         si = p_next // ps
-                        cur_pg = int(bt[b, si])
-                        rid_b = slot_rid[b]
-                        if cur_pg >= self.num_pages:
-                            pg = pool.alloc(1)[0]
-                            bt[b, si] = pg
-                            held[rid_b].append(pg)
-                        elif pool.refcount[cur_pg] > 1:
-                            pg = pool.fork(cur_pg)
-                            caches = _copy_page_jit(
-                                caches, jnp.int32(cur_pg), jnp.int32(pg)
-                            )
-                            hr = held[rid_b]
-                            hr[hr.index(cur_pg)] = pg
-                            bt[b, si] = pg
-                            stats.cow_forks += 1
+                        while True:
+                            rid_b = slot_rid[b]
+                            cur_pg = int(bt[b, si])
+                            try:
+                                if cur_pg >= self.num_pages:
+                                    pg = pool.alloc(1)[0]
+                                    bt[b, si] = pg
+                                    held[rid_b].append(pg)
+                                elif pool.refcount[cur_pg] > 1:
+                                    pg = pool.fork(cur_pg)
+                                    caches = _copy_page_jit(
+                                        caches, jnp.int32(cur_pg),
+                                        jnp.int32(pg))
+                                    hr = held[rid_b]
+                                    hr[hr.index(cur_pg)] = pg
+                                    bt[b, si] = pg
+                                    stats.cow_forks += 1
+                                break
+                            except (PageExhausted,
+                                    faults.InjectedFault):
+                                if not self.preempt:
+                                    raise
+                                if not reclaim_for(b):
+                                    break   # b itself was preempted
                     stats.pages_allocated_total = pool.allocs_total
-                    # device tables clamp the unbacked sentinel to a valid
-                    # page id: reads of it are hidden by the per-lane
-                    # attention-length mask, writes never target it
-                    bt_dev = jnp.asarray(np.minimum(bt, self.num_pages - 1))
-                    logits, caches = self._decode_paged(
+                    live = alive()
+
+                if not live:
+                    # evictions/retirements emptied the decode batch:
+                    # settle the books and refill before dispatching
+                    drain(0)
+                    admit_free_slots()
+                    continue
+
+                snapshot = list(slot_rid)
+                step_no = stats.steps
+                first_step = stats.compile_decode_s == 0.0
+                t_step = time.perf_counter()
+                if self.paged:
+                    # device tables clamp the unbacked sentinel to a
+                    # valid page id: reads of it are hidden by the
+                    # per-lane attention-length mask, writes never
+                    # target it
+                    bt_dev = jnp.asarray(
+                        np.minimum(bt, self.num_pages - 1))
+                    logits, caches = supervised(
+                        "engine.decode", self._decode_paged,
                         self.params, cur_tok, caches, jnp.asarray(pos),
-                        bt_dev
-                    )
+                        bt_dev)
                 else:
-                    logits, caches = self._decode(
-                        self.params, cur_tok, caches, jnp.asarray(pos)
-                    )
+                    logits, caches = supervised(
+                        "engine.decode", self._decode,
+                        self.params, cur_tok, caches, jnp.asarray(pos))
                 rids = np.asarray(
                     [-1 if r is None else r for r in slot_rid], np.int32)
                 idxs = np.asarray(
@@ -603,9 +976,9 @@ class Engine:
                 tok = self._sample(keys, logits[:, 0])
                 cur_tok = tok[:, None]
                 if first_step:
-                    # the first decode step carries the trace+compile cost
-                    # (batched decode + batched sampler): record it apart
-                    # so decode_s is steady-state only
+                    # the first decode step carries the trace+compile
+                    # cost (batched decode + batched sampler): record it
+                    # apart so decode_s is steady-state only
                     jax.block_until_ready(cur_tok)
                     stats.compile_decode_s = time.perf_counter() - t_step
                 for b in live:
@@ -629,37 +1002,36 @@ class Engine:
                     stats.active_tokens.append(active)
                 pending.append((tok, snapshot, step_no))
 
-            # drain deferred bookkeeping (fully once no lane is live)
-            while len(pending) > (depth if live else 0):
-                t0 = time.perf_counter()
-                toks_dev, snapshot, step_no = pending.popleft()
-                freed = bookkeep(np.asarray(toks_dev), snapshot, step_no)
-                for b in freed:
-                    rid_f = snapshot[b]
-                    slot_rid[b] = None
-                    pos[b] = self.cache_len
-                    if self.paged:
-                        # incremental release: the pages go back the
-                        # moment THIS request retires, not when the slot
-                        # is eventually refilled
-                        for pg in held.pop(rid_f, []):
-                            pool.release(pg)
-                        bt[b] = self.num_pages
-                if self.paged and self.defrag_every and freed:
-                    retires_since_defrag += len(freed)
-                    if retires_since_defrag >= self.defrag_every:
-                        do_defrag()
-                        retires_since_defrag = 0
-                self.monitor.record(0, time.perf_counter() - t0)
-                if self.supervisor is not None:
-                    self.supervisor.beat(0)
-            admit_free_slots()
+                # drain deferred bookkeeping (fully once no lane is live)
+                drain(depth if alive() else 0)
+                admit_free_slots()
+                if __debug__ and self.paged:
+                    pool.assert_conservation(
+                        held_refs=sum(len(v) for v in held.values())
+                    )
+        except NodeLossError as e:
+            # permanent device-step loss: degrade STRUCTURALLY — every
+            # request leaves with a terminal status, every page returns
+            # to the pool, and the caller gets results, not a traceback
+            drain(0)
+            for b in range(B):
+                if slot_rid[b] is not None and not retired[slot_rid[b]]:
+                    evict(b, FAILED)
+            for req, _replay in list(resume_q):
+                terminal_unadmitted(req, FAILED)
+            for req in list(queue) + list(arrivals):
+                terminal_unadmitted(req, FAILED)
+            resume_q.clear()
+            queue.clear()
+            arrivals.clear()
+            stats.node_loss = str(e)
             if __debug__ and self.paged:
-                pool.assert_conservation(
-                    held_refs=sum(len(v) for v in held.values())
-                )
+                pool.assert_conservation(held_refs=0)
 
         jax.block_until_ready(cur_tok)
+        stats.step_retries = self.supervisor.retries_total - rt0
+        if plan is not None:
+            stats.faults_injected = plan.injected - f0
         stats.decode_s = max(
             time.perf_counter() - t_run - stats.prefill_s
             - stats.compile_prefill_s - stats.compile_decode_s, 1e-9

@@ -43,6 +43,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import core as ak
+from repro.runtime import faults
+
+
+class PageExhausted(RuntimeError):
+    """The pool cannot back an allocation right now. Deliberately a
+    RuntimeError subclass so pre-existing callers that catch/match the
+    historical ``RuntimeError("page pool exhausted: ...")`` keep working —
+    but the engine's preemption path catches THIS type specifically and
+    turns it into an eviction instead of a crash."""
 
 
 class PagePool:
@@ -70,8 +79,12 @@ class PagePool:
         """Claim the first ``count`` free pages (refcount 0 -> 1)."""
         if count <= 0:
             return []
+        # fault-injection site: fires BEFORE the free-list is consulted,
+        # so an injected PageExhausted exercises the engine's preemption
+        # path even when pages are actually free (runtime/faults.py)
+        faults.check("pool.alloc")
         if self.free_count() < count:
-            raise RuntimeError(
+            raise PageExhausted(
                 f"page pool exhausted: wanted {count} pages, "
                 f"{self.free_count()}/{self.num_pages} free"
             )

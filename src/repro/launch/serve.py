@@ -24,6 +24,7 @@ features are not slot-refillable yet).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 
@@ -126,6 +127,12 @@ class ServeStats:
     prefill_s: float
     decode_s: float
     tokens: int          # EOS-aware when the loop ran with an eos_id
+    #: per-rid terminal status (engine path only; None for the fixed-batch
+    #: fallback, which predates the status lifecycle)
+    statuses: dict | None = None
+    #: the engine's full EngineStats (preemptions, step_retries,
+    #: faults_injected, ...) when the engine served the batch
+    engine_stats: object | None = None
 
     @property
     def tokens_per_s(self):
@@ -135,7 +142,8 @@ class ServeStats:
 def serve_loop(params, cfg, prompts, *, max_new: int = 32, cache_len: int,
                temperature=1.0, top_k=0, top_p=1.0, seed=0, eos_id=None,
                frames=None, patches=None, ak_tuning=None, fused=True,
-               paged=False, page_size=None, num_pages=None):
+               paged=False, page_size=None, num_pages=None,
+               preempt=False, queue_cap=None, deadline=None, chaos=None):
     """prompts: (B, S_prompt) int32. Returns (generated (B, max_new), stats).
 
     Engine-schedulable families run through the continuous-batching engine
@@ -152,27 +160,51 @@ def serve_loop(params, cfg, prompts, *, max_new: int = 32, cache_len: int,
     (dense/moe; DESIGN.md §8a). ``page_size`` defaults to the
     ``page_gather`` primitive's TuningTable knob, ``num_pages`` to a
     full-footprint pool (undersize it to see the admission gate defer).
+
+    Failure tier (engine families only; DESIGN.md §9): ``preempt`` turns
+    page exhaustion into evict-and-replay instead of a crash; ``deadline``
+    (engine steps from submission) retires late requests TIMED_OUT;
+    ``queue_cap`` bounds admission (overflow REJECTED); ``chaos`` (a seed)
+    runs under ``faults.FaultPlan.seeded`` with a retrying supervisor —
+    same seed, same injected failures. Per-rid outcomes land in
+    ``ServeStats.statuses``/``engine_stats``.
     """
     if cfg.family in ENGINE_FAMILIES and frames is None and patches is None:
         B, S = prompts.shape
+        sup = None
+        if chaos is not None:
+            from repro.runtime.supervisor import Supervisor
+            sup = Supervisor(None, n_hosts=1, max_retries=3,
+                             sleep=lambda s: None)
         eng = Engine(
             params, cfg, slots=B, cache_len=cache_len, prompt_pad=S,
             temperature=temperature, top_k=top_k, top_p=top_p, seed=seed,
             eos_id=eos_id, fused_sampler=fused, ak_tuning=ak_tuning,
             paged=paged, page_size=page_size, num_pages=num_pages,
+            preempt=preempt or chaos is not None, queue_cap=queue_cap,
+            supervisor=sup,
         )
         host = np.asarray(prompts, np.int32)
-        results, es = eng.run(
-            [Request(rid=i, prompt=host[i], max_new=max_new)
-             for i in range(B)]
-        )
+        from repro.runtime import faults
+        # only install a plan when asked — active(None) would mask a plan
+        # the CALLER installed around this call
+        ctx = (faults.active(faults.FaultPlan.seeded(chaos))
+               if chaos is not None else contextlib.nullcontext())
+        with ctx:
+            results, es = eng.run(
+                [Request(rid=i, prompt=host[i], max_new=max_new,
+                         deadline=deadline)
+                 for i in range(B)]
+            )
         pad = eos_id if eos_id is not None else 0
         toks = np.full((B, max_new), pad, np.int32)
         for i in range(B):
             got = results[i].tokens[:max_new]
             toks[i, :len(got)] = got
         return jnp.asarray(toks), ServeStats(
-            prefill_s=es.prefill_s, decode_s=es.decode_s, tokens=es.tokens
+            prefill_s=es.prefill_s, decode_s=es.decode_s, tokens=es.tokens,
+            statuses={i: results[i].status for i in sorted(results)},
+            engine_stats=es,
         )
 
     scope = (
@@ -256,6 +288,23 @@ def main(argv=None):
     ap.add_argument("--defrag-every", type=int, default=0,
                     help="compact the page pool every N retirements "
                          "(0: never)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="preempt-and-recompute under page exhaustion: "
+                         "evict the least-progressed lane and replay it "
+                         "later, token-identically (implies --paged "
+                         "semantics; no-op for the contiguous cache)")
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="per-request deadline in engine steps from "
+                         "submission; late requests retire TIMED_OUT "
+                         "(default: none)")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="bounded admission queue; arrivals past the cap "
+                         "are REJECTED newest-first (default: unbounded)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="run under a seeded fault plan (runtime/faults.py)"
+                         ": injected allocator/admission/device-step "
+                         "failures, absorbed by supervised retries and "
+                         "preemption; same seed, same faults")
     args = ap.parse_args(argv)
 
     cfg = load_smoke_config(args.arch)
@@ -273,17 +322,31 @@ def main(argv=None):
             ps = args.page_size or int(
                 registry.tuning.lookup("page_gather")["page_size"])
             cache_len = -(-cache_len // ps) * ps
+        chaos = args.chaos is not None
+        sup = None
+        if chaos:
+            # chaos runs want retries with no real sleeping in the loop
+            from repro.runtime.supervisor import Supervisor
+            sup = Supervisor(None, n_hosts=1, max_retries=3,
+                             sleep=lambda s: None)
         eng = Engine(
             params, cfg, slots=args.slots, cache_len=cache_len,
             prompt_pad=args.prompt_len, top_k=args.top_k, top_p=args.top_p,
             eos_id=args.eos, fused_sampler=not args.unfused,
             paged=args.paged, page_size=args.page_size,
             num_pages=args.num_pages, defrag_every=args.defrag_every,
+            preempt=args.preempt or chaos, queue_cap=args.queue_cap,
+            supervisor=sup,
         )
-        results, stats = eng.run([
-            Request(rid=i, prompt=prompts[i], max_new=args.max_new)
-            for i in range(args.requests)
-        ])
+        from repro.runtime import faults
+        ctx = (faults.active(faults.FaultPlan.seeded(args.chaos))
+               if chaos else contextlib.nullcontext())
+        with ctx:
+            results, stats = eng.run([
+                Request(rid=i, prompt=prompts[i], max_new=args.max_new,
+                        deadline=args.deadline)
+                for i in range(args.requests)
+            ])
         done = sum(r.finished_step >= 0 for r in results.values())
         print(
             f"served {done}/{args.requests} requests on {args.slots} slots; "
@@ -300,6 +363,18 @@ def main(argv=None):
                 f"cow forks {stats.cow_forks}; defrags {stats.defrags}; "
                 f"{stats.resident_bytes_per_active_token:.0f} "
                 f"resident B/active token"
+            )
+        if chaos or args.preempt or args.deadline is not None \
+                or args.queue_cap is not None:
+            from collections import Counter
+            sts = Counter(r.status for r in results.values())
+            print(
+                "faults: "
+                + " ".join(f"{k}={v}" for k, v in sorted(sts.items()))
+                + f"; injected={stats.faults_injected} "
+                f"preemptions={stats.preemptions} "
+                f"resumes={stats.resumes} retries={stats.step_retries} "
+                f"rejections={stats.rejections} timeouts={stats.timeouts}"
             )
         return
 

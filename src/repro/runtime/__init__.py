@@ -1,5 +1,7 @@
+from repro.runtime import faults  # noqa: F401
 from repro.runtime.supervisor import (  # noqa: F401
     ElasticPlan,
+    NodeLossError,
     StragglerMonitor,
     Supervisor,
     shrink_data_axis,

@@ -5,7 +5,14 @@ What actually fails at 1000+ nodes and what this module does about it:
   * **Transient step failure** (preempted host, flaky ICI link, XLA OOM
     race): ``Supervisor.run_step`` retries the jitted step up to
     ``max_retries`` with the same inputs — steps are pure functions of
-    (state, batch), so retry is exact.
+    (state, batch), so retry is exact. Retries back off exponentially
+    (``backoff_base`` doubling up to ``backoff_cap``) through an
+    injectable ``sleep``, so a congested interconnect is not hammered
+    back-to-back; a per-window retry budget (``window_retry_budget``
+    retries per ``retry_window`` seconds on the injectable clock)
+    escalates a *flapping* step — one that keeps limping through on its
+    last attempt — to the permanent-loss path instead of retrying
+    forever.
   * **Permanent node loss**: the step keeps failing → Supervisor raises
     ``NodeLossError`` carrying an ``ElasticPlan``: shrink the ``data`` axis
     to the largest size the survivors support, restore the last committed
@@ -85,7 +92,13 @@ class StragglerMonitor:
         vals = [e for e in self.ema if e is not None]
         if len(vals) < 2:
             return []
-        med = sorted(vals)[len(vals) // 2]
+        # true median: the upper-middle element over-states the threshold
+        # for even host counts (sorted[n // 2] is the LARGER of the two
+        # middle values), which can hide a genuine straggler just under
+        # the inflated cut — average the middle pair instead
+        s = sorted(vals)
+        n = len(s)
+        med = s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
         return [
             i
             for i, e in enumerate(self.ema)
@@ -105,13 +118,19 @@ class Supervisor:
 
     def __init__(
         self,
-        step_fn: Callable,
+        step_fn: Callable | None,
         *,
         max_retries: int = 2,
         heartbeat_timeout: float = 300.0,
         data_axis: int = 16,
         model_axis: int = 16,
         clock: Callable[[], float] = time.monotonic,
+        n_hosts: int = 0,
+        sleep: Callable[[float], None] = time.sleep,
+        backoff_base: float = 0.05,
+        backoff_cap: float = 2.0,
+        retry_window: float = 60.0,
+        window_retry_budget: int | None = None,
     ):
         self.step_fn = step_fn
         self.max_retries = max_retries
@@ -119,8 +138,20 @@ class Supervisor:
         self.data_axis = data_axis
         self.model_axis = model_axis
         self.clock = clock
-        self.last_heartbeat: dict[int, float] = {}
+        self.sleep = sleep
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.retry_window = retry_window
+        self.window_retry_budget = window_retry_budget
+        # Seed every known host with a construction-time heartbeat: a host
+        # that dies before its FIRST beat would otherwise be absent from
+        # the dict forever and could never be declared dead.
+        now = self.clock()
+        self.last_heartbeat: dict[int, float] = {
+            h: now for h in range(n_hosts)
+        }
         self.retries_total = 0
+        self._retry_times: list[float] = []
 
     def beat(self, host: int):
         self.last_heartbeat[host] = self.clock()
@@ -140,15 +171,36 @@ class Supervisor:
             model=self.model_axis,
         )
 
-    def run_step(self, *args, **kwargs):
+    def _window_exhausted(self) -> bool:
+        """True when the per-window retry budget is spent — the step is
+        flapping (limping through on its last attempt over and over) and
+        should take the permanent-loss path instead of retrying forever."""
+        if self.window_retry_budget is None:
+            return False
+        cutoff = self.clock() - self.retry_window
+        self._retry_times = [t for t in self._retry_times if t >= cutoff]
+        return len(self._retry_times) >= self.window_retry_budget
+
+    def run_step(self, *args, step_fn: Callable | None = None,
+                 host: int = 0, **kwargs):
+        fn = step_fn if step_fn is not None else self.step_fn
+        if fn is None:
+            raise ValueError("no step_fn: pass one at construction or call")
         err = None
+        delay = self.backoff_base
         for attempt in range(self.max_retries + 1):
+            if attempt > 0:
+                self.sleep(delay)
+                delay = min(delay * 2.0, self.backoff_cap)
             try:
-                out = self.step_fn(*args, **kwargs)
-                self.beat(0)
+                out = fn(*args, **kwargs)
+                self.beat(host)
                 return out
             except Exception as e:  # noqa: BLE001 — anything transient
                 err = e
                 self.retries_total += 1
+                self._retry_times.append(self.clock())
+                if self._window_exhausted():
+                    break
         dead = max(len(self.dead_hosts()), 1)
         raise NodeLossError(self.elastic_plan(dead)) from err

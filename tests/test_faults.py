@@ -1,0 +1,389 @@
+"""Fault-tolerant serving: deterministic fault injection, preemption,
+deadlines/backpressure, supervised retries, and graceful node loss.
+
+Covers the PR-7 acceptance criteria:
+  * FaultPlan is exact and replayable: scripted faults fire at exactly
+    (site, call_index), seeded plans regenerate bitwise from one integer;
+  * page-pool conservation (allocated + free == pool, no leaked refs)
+    holds across injected alloc failures — both at the allocator level
+    (property sweep, hypothesis-driven when available) and through the
+    engine's admission path (prefix pages shared, tail alloc faulted);
+  * preempt/resume determinism: a request evicted mid-decode at EVERY
+    possible step offset finishes with tokens identical to the
+    uninterrupted run, for attention and ssm families — per-request rng
+    (fold_in(seed, rid, idx)) is what makes recompute invisible;
+  * pool exhaustion with ``preempt=True`` evicts-and-recomputes instead
+    of raising (the engine "page pool too small" RuntimeError stays
+    reachable only with preemption off);
+  * supervised decode/prefill: injected transient step faults retry with
+    backoff instead of aborting the batch, outputs unchanged;
+  * permanent node loss degrades structurally: every request leaves with
+    a terminal status and every page returns to the pool;
+  * deadlines + backpressure retire through structured statuses
+    (TIMED_OUT / REJECTED), never exceptions.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import load_smoke_config
+from repro.launch.engine import (
+    COMPLETED,
+    FAILED,
+    PENDING,
+    REJECTED,
+    TERMINAL,
+    TIMED_OUT,
+    Engine,
+    Request,
+)
+from repro.launch.paging import PageExhausted, PagePool
+from repro.models import model as M
+from repro.runtime import faults
+from repro.runtime.supervisor import Supervisor
+
+# hypothesis is an optional test dep (same pattern as test_paging.py):
+# only the property sweep needs it — everything else must run everywhere.
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised in minimal containers
+    given = None
+
+ARCH = "internlm2_1_8b"
+SSM_ARCH = "mamba2_1_3b"
+PS = 4          # page size shared by every paged test (one trace set)
+CACHE = 16
+PLEN = 4
+MAX_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = load_smoke_config(ARCH)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prompts(cfg, n, plen=PLEN, seed=1):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (n, plen), 0,
+                           cfg.vocab))
+
+
+def _reqs(prompts, n, max_new=MAX_NEW):
+    return [Request(rid=i, prompt=prompts[i], max_new=max_new)
+            for i in range(n)]
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("cache_len", CACHE)
+    kw.setdefault("prompt_pad", PLEN)
+    kw.setdefault("temperature", 0.0)
+    return Engine(params, cfg, **kw)
+
+
+def _tokens(res):
+    return {r: res[r].tokens for r in res}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: exact, replayable schedules
+# ---------------------------------------------------------------------------
+
+
+def test_scripted_plan_fires_at_exact_call_index():
+    plan = faults.FaultPlan.scripted(("pool.alloc", 2), ("pool.alloc", 0))
+    with faults.active(plan):
+        with pytest.raises(faults.InjectedFault) as e0:
+            faults.check("pool.alloc")      # call 0: scheduled
+        assert e0.value.site == "pool.alloc" and e0.value.index == 0
+        faults.check("pool.alloc")          # call 1: clean
+        with pytest.raises(faults.InjectedFault):
+            faults.check("pool.alloc")      # call 2: scheduled
+        faults.check("pool.alloc")          # past the schedule
+        faults.check("engine.admit")        # other sites untouched
+    assert plan.fired == [("pool.alloc", 0), ("pool.alloc", 2)]
+    assert plan.injected == 2
+    assert plan.calls("pool.alloc") == 4
+
+
+def test_scripted_plan_custom_exception_type():
+    plan = faults.FaultPlan.scripted(("pool.alloc", 0, PageExhausted))
+    with faults.active(plan):
+        with pytest.raises(PageExhausted):
+            faults.check("pool.alloc")
+
+
+def test_seeded_plan_replays_from_its_seed():
+    a = faults.FaultPlan.seeded(7, rate=0.2, horizon=64)
+    b = faults.FaultPlan.seeded(7, rate=0.2, horizon=64)
+    c = faults.FaultPlan.seeded(8, rate=0.2, horizon=64)
+    assert a.schedule.keys() == b.schedule.keys()
+    assert a.schedule.keys() != c.schedule.keys()
+    assert a.pending > 0     # rate 0.2 over 4 sites x 64 calls
+
+
+def test_check_is_noop_without_a_plan_and_restores_on_exit():
+    faults.check("pool.alloc")              # no plan installed: no-op
+    plan = faults.FaultPlan.scripted(("pool.alloc", 0))
+    with faults.active(plan):
+        assert faults.current() is plan
+    assert faults.current() is None
+    faults.check("pool.alloc")              # uninstalled again
+
+
+# ---------------------------------------------------------------------------
+# allocator conservation under injected failures (satellite: leak audit)
+# ---------------------------------------------------------------------------
+
+
+def _pool_fault_sweep(seed):
+    """Random alloc/share/release traffic with faults injected into a
+    random subset of alloc calls; conservation must hold after EVERY op,
+    faulted or not."""
+    rng = np.random.default_rng(seed)
+    num_pages = int(rng.integers(4, 12))
+    plan = faults.FaultPlan.seeded(seed, sites=("pool.alloc",),
+                                   rate=0.3, horizon=64)
+    pool = PagePool(num_pages, 4)
+    held = []
+    with faults.active(plan):
+        for _ in range(48):
+            op = rng.integers(0, 3)
+            try:
+                if op == 0:
+                    held.extend(pool.alloc(int(rng.integers(1, 3))))
+                elif op == 1 and held:
+                    held.append(pool.share(held[int(
+                        rng.integers(len(held)))]))
+                elif op == 2 and held:
+                    pool.release(held.pop(int(rng.integers(len(held)))))
+            except (faults.InjectedFault, PageExhausted):
+                pass
+            pool.assert_conservation(held_refs=len(held))
+    for p in held:
+        pool.release(p)
+    pool.assert_conservation(held_refs=0)
+    assert pool.free_count() == num_pages
+
+
+if given is not None:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_pool_conservation_across_injected_alloc_failures(seed):
+        _pool_fault_sweep(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(20))
+    def test_pool_conservation_across_injected_alloc_failures(seed):
+        """Deterministic sweep that runs even without hypothesis."""
+        _pool_fault_sweep(seed)
+
+
+def test_admission_fault_leaks_no_pages(model):
+    """Identical prompts: request 1's admission SHARES request 0's prompt
+    page, then an injected fault hits its prefill. Three escapes, all
+    leak-free:
+      (a) the supervisor retries the prefill in place — the shared pages
+          stay acquired across the retry and the outputs are identical;
+      (b) retries exhausted — the admission unwinds every acquired
+          reference BEFORE NodeLossError propagates, so even the
+          degraded run conserves the pool;
+      (c) a fault at the engine.admit site (before any acquisition)
+          re-queues the request and the next pass admits it cleanly."""
+    params, cfg = model
+    prompt = _prompts(cfg, 1)[0]
+    reqs = lambda: [Request(rid=i, prompt=prompt, max_new=MAX_NEW)
+                    for i in range(2)]
+    eng = _engine(params, cfg, paged=True, page_size=PS, num_pages=8)
+    want, _ = eng.run(reqs())
+    # (a) prefill call 1 = second admission, after its prefix share
+    plan = faults.FaultPlan.scripted(("engine.prefill", 1))
+    sup = Supervisor(None, n_hosts=1, max_retries=1, sleep=lambda s: None)
+    with faults.active(plan):
+        eng2 = _engine(params, cfg, paged=True, page_size=PS, num_pages=8,
+                       supervisor=sup)
+        got, st = eng2.run(reqs())
+    assert plan.fired == [("engine.prefill", 1)]
+    assert st.step_retries == 1
+    assert _tokens(got) == _tokens(want)
+    assert all(got[r].status == COMPLETED for r in got)
+    eng2.pool.assert_conservation(held_refs=0)
+    assert eng2.pool.free_count() == 8
+    # (b) no retry budget: the partial admission must unwind its shared
+    # reference before the loss escalates
+    plan = faults.FaultPlan.scripted(("engine.prefill", 1))
+    sup = Supervisor(None, n_hosts=1, max_retries=0, sleep=lambda s: None)
+    with faults.active(plan):
+        eng3 = _engine(params, cfg, paged=True, page_size=PS, num_pages=8,
+                       supervisor=sup)
+        got3, st3 = eng3.run(reqs())
+    assert st3.node_loss
+    assert all(got3[r].status == FAILED for r in got3)
+    eng3.pool.assert_conservation(held_refs=0)
+    assert eng3.pool.free_count() == 8
+    # (c) admission-site fault: transient, re-queued, nothing acquired
+    plan = faults.FaultPlan.scripted(("engine.admit", 1))
+    with faults.active(plan):
+        eng4 = _engine(params, cfg, paged=True, page_size=PS, num_pages=8)
+        got4, _ = eng4.run(reqs())
+    assert plan.fired == [("engine.admit", 1)]
+    assert _tokens(got4) == _tokens(want)
+    eng4.pool.assert_conservation(held_refs=0)
+
+
+# ---------------------------------------------------------------------------
+# preempt/resume determinism (satellite: every offset, both families)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", [ARCH, SSM_ARCH])
+def test_preempt_resume_identical_at_every_offset(arch):
+    cfg = load_smoke_config(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, 2)
+    base_res, _ = _engine(params, cfg).run(_reqs(prompts, 2))
+    base = _tokens(base_res)
+    for step in range(MAX_NEW - 1):     # an eviction before EVERY decode
+        eng = _engine(params, cfg, preempt_script={step: 0})
+        res, st = eng.run(_reqs(prompts, 2))
+        assert st.preemptions == 1 and st.resumes == 1, step
+        assert _tokens(res) == base, f"divergence at eviction step {step}"
+        assert all(res[r].status == COMPLETED for r in res)
+        assert res[0].preemptions == 1
+
+
+def test_preemption_past_budget_retires_structurally(model):
+    """A request evicted more than max_preemptions times stops being
+    retried and leaves with PREEMPTED — partial tokens kept."""
+    params, cfg = model
+    prompts = _prompts(cfg, 1)
+    eng = _engine(params, cfg, max_preemptions=1,
+                  preempt_script={1: 0, 3: 0, 5: 0, 7: 0, 9: 0})
+    res, st = eng.run(_reqs(prompts, 1))
+    assert res[0].status == "PREEMPTED"
+    assert res[0].preemptions == 2      # budget + the final straw
+    assert 0 < len(res[0].tokens) < MAX_NEW
+
+
+# ---------------------------------------------------------------------------
+# pool exhaustion: preempt-and-recompute instead of crash
+# ---------------------------------------------------------------------------
+
+
+def test_exhaustion_preempts_and_completes_identically(model):
+    """The geometry that makes the stock paged engine raise 'page pool
+    too small' completes every request bit-for-bit with preempt=True."""
+    params, cfg = model
+    prompts = _prompts(cfg, 4)
+    base = _tokens(_engine(params, cfg).run(_reqs(prompts, 4))[0])
+    with pytest.raises(RuntimeError, match="page pool"):
+        _engine(params, cfg, paged=True, page_size=PS,
+                num_pages=4).run(_reqs(prompts, 4))
+    eng = _engine(params, cfg, paged=True, page_size=PS, num_pages=4,
+                  preempt=True)
+    res, st = eng.run(_reqs(prompts, 4))
+    assert st.preemptions > 0 and st.resumes > 0
+    assert _tokens(res) == base
+    assert all(res[r].status == COMPLETED for r in res)
+    assert eng.pool.free_count() == 4   # provably released
+    eng.pool.assert_conservation(held_refs=0)
+
+
+def test_injected_exhaustion_mid_decode_is_absorbed(model):
+    """PageExhausted injected at decode-growth allocs (pages actually
+    free) drives the eviction path without real memory pressure."""
+    params, cfg = model
+    prompts = _prompts(cfg, 4)
+    base = _tokens(_engine(params, cfg).run(_reqs(prompts, 4))[0])
+    plan = faults.FaultPlan.scripted(
+        ("pool.alloc", 5, PageExhausted), ("pool.alloc", 9))
+    with faults.active(plan):
+        eng = _engine(params, cfg, paged=True, page_size=PS, num_pages=12,
+                      preempt=True)
+        res, st = eng.run(_reqs(prompts, 4))
+    assert plan.injected == 2
+    assert st.faults_injected == 2
+    assert _tokens(res) == base
+    assert eng.pool.free_count() == 12
+
+
+# ---------------------------------------------------------------------------
+# supervised device steps: transient retry, permanent loss
+# ---------------------------------------------------------------------------
+
+
+def test_supervised_steps_retry_injected_faults(model):
+    params, cfg = model
+    prompts = _prompts(cfg, 3)
+    base = _tokens(_engine(params, cfg).run(_reqs(prompts, 3))[0])
+    plan = faults.FaultPlan.scripted(
+        ("engine.decode", 1), ("engine.decode", 4), ("engine.prefill", 2))
+    sup = Supervisor(None, n_hosts=1, max_retries=2, sleep=lambda s: None)
+    with faults.active(plan):
+        res, st = _engine(params, cfg, supervisor=sup).run(
+            _reqs(prompts, 3))
+    assert st.step_retries == 3         # one retry per injected fault
+    assert _tokens(res) == base         # retries are exact replays
+    assert all(res[r].status == COMPLETED for r in res)
+
+
+def test_node_loss_degrades_structurally(model):
+    """Every decode attempt failing: the engine returns results (every
+    request FAILED, pages conserved) instead of propagating."""
+    params, cfg = model
+    prompts = _prompts(cfg, 4)
+    plan = faults.FaultPlan.scripted(
+        *[("engine.decode", i) for i in range(12)])
+    sup = Supervisor(None, n_hosts=1, max_retries=2, sleep=lambda s: None)
+    with faults.active(plan):
+        eng = _engine(params, cfg, paged=True, page_size=PS, num_pages=8,
+                      preempt=True, supervisor=sup)
+        res, st = eng.run(_reqs(prompts, 4))
+    assert st.node_loss
+    assert sorted(res) == [0, 1, 2, 3]
+    assert all(res[r].status == FAILED for r in res)
+    assert st.failures == 4
+    assert eng.pool.free_count() == 8
+    eng.pool.assert_conservation(held_refs=0)
+
+
+# ---------------------------------------------------------------------------
+# deadlines + backpressure: structured statuses, never exceptions
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_and_queue_cap_statuses(model):
+    params, cfg = model
+    prompts = _prompts(cfg, 8)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=MAX_NEW)
+            for i in range(6)]
+    reqs.append(Request(rid=6, prompt=prompts[6], max_new=MAX_NEW,
+                        deadline=2, submit_step=3))      # hopeless
+    reqs.append(Request(rid=7, prompt=prompts[7], max_new=MAX_NEW,
+                        submit_step=40))                 # after the burst
+    eng = _engine(params, cfg, slots=1, queue_cap=4)
+    res, st = eng.run(reqs)
+    statuses = {r: res[r].status for r in sorted(res)}
+    assert statuses == {0: COMPLETED, 1: COMPLETED, 2: COMPLETED,
+                        3: COMPLETED, 4: REJECTED, 5: REJECTED,
+                        6: TIMED_OUT, 7: COMPLETED}
+    assert st.rejections == 2 and st.timeouts == 1
+    assert all(res[r].status in TERMINAL for r in res)
+    assert all(res[r].status != PENDING for r in res)
+    # the late arrival decoded after an idle fast-forward, untainted
+    assert res[7].admitted_step >= 40
+
+
+def test_live_lane_deadline_keeps_partial_tokens(model):
+    params, cfg = model
+    prompts = _prompts(cfg, 1)
+    eng = _engine(params, cfg, paged=True, page_size=PS, num_pages=8)
+    res, st = eng.run([Request(rid=0, prompt=prompts[0], max_new=MAX_NEW,
+                               deadline=3)])
+    assert res[0].status == TIMED_OUT
+    assert 0 < len(res[0].tokens) < MAX_NEW
+    assert eng.pool.free_count() == 8   # evicted lane released its pages

@@ -225,6 +225,77 @@ def test_heartbeat_timeout():
     assert sup.dead_hosts() == [1]
 
 
+def test_supervisor_seeds_known_hosts_at_construction():
+    """A host that dies before its FIRST beat must still be declarable
+    dead — construction seeds every known host's heartbeat."""
+    clock = {"t": 0.0}
+    sup = Supervisor(lambda x: x, heartbeat_timeout=10.0, n_hosts=3,
+                     clock=lambda: clock["t"])
+    clock["t"] = 5.0
+    sup.beat(0)
+    sup.beat(1)
+    clock["t"] = 12.0
+    # host 2 never beat once: without seeding it would be invisible
+    assert sup.dead_hosts() == [2]
+
+
+def test_supervisor_backoff_and_host_id():
+    """Retries back off exponentially through the injectable sleep
+    (base doubling up to the cap, never back-to-back) and the success
+    heartbeat lands on the CALLER'S host id, not a hardcoded 0."""
+    sleeps, calls = [], {"n": 0}
+
+    def flaky(x):
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise RuntimeError("transient")
+        return x * 10
+
+    sup = Supervisor(None, max_retries=3, backoff_base=0.05,
+                     backoff_cap=0.15, sleep=sleeps.append,
+                     clock=lambda: 0.0)
+    assert sup.run_step(7, step_fn=flaky, host=3) == 70
+    assert sleeps == [0.05, 0.1, 0.15]   # doubling, capped
+    assert 3 in sup.last_heartbeat       # host id honoured
+    assert sup.retries_total == 3
+
+
+def test_supervisor_window_retry_budget_escalates_flapping():
+    """A step that keeps limping through on its last attempt exhausts
+    the per-window budget and takes the permanent-loss path; the budget
+    frees up once the window slides past the old retries."""
+    clock = {"t": 0.0}
+    state = {"fail_next": True}
+
+    def flapping(x):
+        if state["fail_next"]:
+            state["fail_next"] = False
+            raise RuntimeError("flap")
+        state["fail_next"] = True
+        return x
+
+    sup = Supervisor(None, max_retries=2, window_retry_budget=2,
+                     retry_window=60.0, sleep=lambda s: None,
+                     clock=lambda: clock["t"])
+    assert sup.run_step(1, step_fn=flapping) == 1   # 1 retry in window
+    with pytest.raises(NodeLossError):
+        sup.run_step(2, step_fn=flapping)           # 2nd retry: budget hit
+    clock["t"] = 61.0                               # window slides
+    state["fail_next"] = True
+    assert sup.run_step(3, step_fn=flapping) == 3
+
+
+def test_straggler_monitor_even_median():
+    """Even host count: the true median (mean of the middle pair) must
+    flag a straggler the inflated upper-middle element would hide."""
+    mon = StragglerMonitor(n_hosts=4, threshold=1.5)
+    for h, v in {0: 1.0, 1: 1.0, 2: 2.0, 3: 2.6}.items():
+        mon.record(h, v)
+    # true median 1.5 -> cut 2.25 -> host 3 (2.6) flagged; the buggy
+    # upper-middle median (2.0 -> cut 3.0) saw nothing
+    assert mon.stragglers() == [3]
+
+
 # --------------------------------------------------------------------- data
 def test_corpus_deterministic_and_restart_safe():
     c = SyntheticCorpus(vocab=1000, seq_len=32, seed=5)
