@@ -62,6 +62,51 @@ def jnp_model_time(n_bytes, passes, bw=JNP_STREAM_BW):
     return JNP_OVERHEAD_S + passes * n_bytes / bw
 
 
+def moe_ffn_act_bytes(rows, d, ff, itemsize):
+    """Activation HBM traffic of the expert FFN over ``rows`` tokens:
+    gate matmul (read x, write h1) + up matmul (read x, write h2) +
+    product (read h1+h2, write h) + down matmul (read h, write y)
+    = rows x (3d + 5ff) elements. Weights are excluded everywhere in the
+    dispatch model — both layouts read the identical expert stacks."""
+    return rows * (3 * d + 5 * ff) * itemsize
+
+
+def moe_dispatch_bytes(T, k, E, d, ff, capacity, itemsize, path):
+    """Modelled HBM bytes of one moe_ffn call under each dispatch layout
+    (benchmarks/moe_dispatch.py gate; DESIGN.md §10).
+
+    ``padded``: gather T·k rows + zero-init the (E·C+1, d) ghost buffer +
+    scatter-add (read+write touched rows) = (3Tk + EC + 1)·d in; the FFN
+    runs over ALL E·C capacity slots; combine gathers ye[slot], masks,
+    and scatter-adds into (T, d) = (4Tk + T)·d.
+
+    ``bucketed``: gather T·k rows expert-contiguously and write them =
+    2Tk·d; the FFN runs over exactly T·k routed rows; combine masks,
+    permutes back token-major and segment-reduces = (4Tk + T)·d.
+
+    The capacity term is the whole story: padded activation traffic scales
+    with E·C = cf·T·k, bucketed with T·k — the modelled ratio approaches
+    cf·(3d+5ff)/(3d+5ff) ≈ cf on FFN-dominated shapes.
+    """
+    Tk = T * k
+    EC = E * capacity
+    combine = (4 * Tk + T) * d * itemsize
+    if path == "padded":
+        dispatch = (3 * Tk + EC + 1) * d * itemsize
+        ffn = moe_ffn_act_bytes(EC, d, ff, itemsize)
+    elif path == "bucketed":
+        dispatch = 2 * Tk * d * itemsize
+        ffn = moe_ffn_act_bytes(Tk, d, ff, itemsize)
+    else:
+        raise ValueError(f"unknown dispatch path {path!r}")
+    return {
+        "dispatch_bytes": dispatch,
+        "ffn_bytes": ffn,
+        "combine_bytes": combine,
+        "total_bytes": dispatch + ffn + combine,
+    }
+
+
 def t_accel(n_bytes, link):
     local = 2 * SORT_PASSES * n_bytes / HBM
     exchange = n_bytes / link + 3 * LAUNCH

@@ -265,6 +265,46 @@ def serving_table(json_path=None):
     return "\n".join(lines)
 
 
+def moe_dispatch_table(json_path=None):
+    """MoE dispatch trajectory (BENCH_moe.json): modelled HBM bytes of the
+    capacity-padded vs bucketed layouts at the gate config, the byte
+    ratio against its gate floor, counted trace-time launches, and the
+    segmented-primitive oracle/sweep tallies. Missing/invalid files
+    degrade to a hint line, never an error."""
+    path = json_path or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_moe.json",
+    )
+    if not os.path.exists(path):
+        return (f"(no MoE dispatch trajectory at {path}; populate with "
+                f"`PYTHONPATH=src:. python -m benchmarks.moe_dispatch`)")
+    lines = [
+        "| config (T/k/E/d/ff/cf) | padded MB | bucketed MB | ratio "
+        "(gate) | launches b/p | oracle checks | sweep entries |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    try:
+        with open(path) as f:
+            entries = json.load(f)["entries"]
+        for e in entries:
+            c = e.get("config") or {}
+            cfg = (f"{c.get('T')}/{c.get('k')}/{c.get('E')}/{c.get('d')}/"
+                   f"{c.get('ff')}/{c.get('cf')}")
+            pb = (e.get("padded") or {}).get("total_bytes")
+            bb = (e.get("bucketed") or {}).get("total_bytes")
+            la = e.get("launches") or {}
+            lines.append(
+                f"| {cfg} | {pb / 1e6:.1f} | {bb / 1e6:.1f} | "
+                f"{e.get('bytes_ratio')}x (>={e.get('gate_min_ratio')}x) | "
+                f"{la.get('bucketed')}/{la.get('padded')} | "
+                f"{e.get('oracle_checks')} | {e.get('sweep_entries')} |"
+            )
+    except (OSError, json.JSONDecodeError, KeyError, TypeError,
+            AttributeError) as e:
+        return f"(MoE dispatch trajectory at {path} unreadable: {e})"
+    return "\n".join(lines)
+
+
 def tuned_vs_default_table(cache_path=None):
     """Per-primitive modelled speedup of the autotuned knobs over the
     default resolution, read from the repro.tune cache — makes the perf
@@ -315,6 +355,9 @@ def main():
     ap.add_argument("--serve-json", default=None,
                     help="serving trajectory JSON (default: the repo's "
                          "BENCH_serve.json)")
+    ap.add_argument("--moe-json", default=None,
+                    help="MoE dispatch trajectory JSON (default: the "
+                         "repo's BENCH_moe.json)")
     ap.add_argument("--out", default="results/report.md")
     args = ap.parse_args()
 
@@ -332,6 +375,8 @@ def main():
             json.dump(rows, f, indent=1, default=float)
     parts += ["\n\n## Serving (continuous-batching engine)\n",
               serving_table(args.serve_json)]
+    parts += ["\n\n## MoE dispatch (bucketed vs capacity-padded)\n",
+              moe_dispatch_table(args.moe_json)]
     parts += ["\n\n## Tuned vs default (autotune cache)\n",
               tuned_vs_default_table(args.autotune_cache)]
     text = "".join(parts)

@@ -5,6 +5,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
     table2.*        — §III arithmetic kernels (RBF + LJG)          [Table II]
     dispatch.*      — registry jit-cache vs per-call re-jit overhead
     sort_throughput.* — fused-network launch/HBM gate (BENCH_sort.json)
+    moe.dispatch.*  — bucketed-vs-padded MoE dispatch byte gate +
+                      segmented-primitive oracles (BENCH_moe.json)
     fig_scaling.*   — distributed-sort weak/strong scaling         [Figs 1-3]
     fig4.*          — max sorting throughput                       [Fig 4]
     fig5.*          — cost-normalised accelerator crossover        [Fig 5]
@@ -183,7 +185,7 @@ def main(argv=None) -> None:
                          "cache entry (driver: python -m repro.tune)")
     args = ap.parse_args(argv)
 
-    from benchmarks import dispatch_overhead, sort_throughput
+    from benchmarks import dispatch_overhead, moe_dispatch, sort_throughput
 
     if args.tune:
         from repro import tune as T
@@ -214,6 +216,10 @@ def main(argv=None) -> None:
         # slot-refill completion; appends the BENCH_serve.json entry
         # (skipped when its deterministic part matches the last one)
         _emit(serving.run())
+        # MoE dispatch gate: bucketed >= 1.5x modelled-byte win over the
+        # capacity-padded layout, segmented-primitive bitwise oracles, and
+        # the autotune sweep over them; appends the BENCH_moe.json entry
+        _emit(moe_dispatch.run())
         return
 
     from benchmarks import arithmetic, cost, scaling, serving, throughput
@@ -223,6 +229,7 @@ def main(argv=None) -> None:
     _emit(sort_throughput.run())
     _emit(sort_throughput.run_distributed())
     _emit(serving.run())
+    _emit(moe_dispatch.run())
     _emit(scaling.run("weak", n_per_rank=32_768, devcounts=(1, 2, 4, 8)))
     _emit(scaling.run("strong", total=262_144, devcounts=(1, 2, 4, 8)))
     _emit(throughput.run(devcounts=(4,), sizes=(16_384, 65_536)))

@@ -63,6 +63,19 @@ print("all finite        :", bool(ak.all_pred(jnp.isfinite, x)))
 hist, mn, mx = ak.minmax_histogram(x, 16, -4.0, 4.0)
 print("histogram         :", hist)
 
+# -- segmented primitives: CSR (offsets, values) ragged batches -------------
+# One dense launch per call, no per-segment kernels (DESIGN.md §10). These
+# power the MoE expert dispatch: since the bucketed-dispatch PR, moe_ffn
+# gathers tokens expert-contiguously and combines with ONE segmented_reduce
+# instead of a zero-padded (E*C, d) capacity buffer.
+offsets = jnp.asarray([0, 3, 3, 7, 10], jnp.int32)  # 4 segments, one empty
+seg = x[:10]
+print("segmented_reduce  :",
+      ak.segmented_reduce(jnp.add, seg, offsets, init=0.0))
+print("segmented_scan    :",
+      ak.segmented_scan(jnp.add, seg, offsets, init=0.0)[:4])
+print("segmented_sort    :", ak.segmented_sort(seg, offsets)[:4])
+
 # -- the same call sites, hand-tiled Pallas TPU path ------------------------
 # (interpret-mode on CPU; identical results — the paper's dispatch story)
 with ak.backend("pallas"):

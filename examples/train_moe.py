@@ -1,9 +1,12 @@
 """End-to-end driver: train a ~100M-param MoE for a few hundred steps.
 
 Full production path on one CPU: sharded init, jitted train step (AK
-sort-based MoE routing inside), synthetic data pipeline, async atomic
-checkpointing, supervisor retries. Scale the config up and point the mesh
-at a real pod and this is the launch script.
+sort-based MoE routing inside — since the segmented-primitives PR the
+single-host expert FFN runs over true expert-contiguous buckets with an
+``ak.segmented_reduce`` combine, no capacity-padded buffer; DESIGN.md
+§10), synthetic data pipeline, async atomic checkpointing, supervisor
+retries. Scale the config up and point the mesh at a real pod and this
+is the launch script.
 
     PYTHONPATH=src python examples/train_moe.py [--steps 300]
 """

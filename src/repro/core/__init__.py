@@ -18,6 +18,8 @@ from repro.core.ops import (
     map_elements,
     mapreduce,
     reduce,
+    segmented_reduce,
+    segmented_scan,
 )
 from repro.core.sort import (
     merge,
@@ -26,6 +28,7 @@ from repro.core.sort import (
     merge_sort_batched,
     merge_sort_by_key,
     nucleus_mask,
+    segmented_sort,
     sortperm,
     sortperm_batched,
     sortperm_lowmem,
@@ -49,6 +52,7 @@ __all__ = [
     "mapreduce", "reduce",
     "merge", "merge_kv",
     "merge_sort", "merge_sort_batched", "merge_sort_by_key", "nucleus_mask",
+    "segmented_reduce", "segmented_scan", "segmented_sort",
     "sortperm",
     "sortperm_batched", "sortperm_lowmem", "topk",
     "searchsortedfirst", "searchsortedlast",

@@ -30,6 +30,8 @@ from repro.core import registry
 _map = registry.get("map")
 _mapreduce = registry.get("mapreduce")
 _accumulate = registry.get("accumulate")
+_segmented_reduce = registry.get("segmented_reduce")
+_segmented_scan = registry.get("segmented_scan")
 
 
 def _identity(a):
@@ -106,6 +108,34 @@ def accumulate(
     """``accumulate`` — prefix scan (inclusive or exclusive), single pass."""
     return _accumulate(x, op=op, init=init, inclusive=inclusive,
                        backend=backend)
+
+
+def segmented_reduce(op, values, offsets, *, init,
+                     backend: str | None = None):
+    """Per-segment reduce over CSR ``(offsets, values)`` — the ragged
+    ``reduce`` (DESIGN.md §10).
+
+    ``offsets`` is 1-D int of length ``S + 1`` with ``offsets[0] == 0`` and
+    ``offsets[-1] == len(values)``; segment ``s`` folds
+    ``values[offsets[s]:offsets[s+1]]`` under ``op`` seeded by ``init``
+    (empty segments yield ``init``). Returns shape ``(S,) + values.shape[1:]``
+    — trailing feature axes (the MoE combine) take the portable flagged
+    path on every backend; 1-D values get the single-pass Pallas kernel.
+    No fold-order guarantee, exactly like ``reduce``.
+    """
+    return _segmented_reduce(values, offsets, op=op, init=init,
+                             backend=backend)
+
+
+def segmented_scan(op, values, offsets, *, init, inclusive: bool = True,
+                   backend: str | None = None):
+    """Per-segment prefix scan over CSR ``(offsets, values)`` — the ragged
+    ``accumulate``: accumulation restarts at every segment head (exclusive
+    heads read ``init``). Same CSR contract as ``segmented_reduce``; one
+    Pallas pass for 1-D values, flagged-pair carry across blocks.
+    """
+    return _segmented_scan(values, offsets, op=op, init=init,
+                           inclusive=inclusive, backend=backend)
 
 
 def any_pred(f, x, *, backend: str | None = None):

@@ -56,7 +56,7 @@ from repro.core import dispatch
 from repro.kernels import common as KC
 from repro.kernels import hist_kernel, map_kernel, reduce_kernel, scan_kernel
 from repro.kernels import merge_kernel, nucleus_kernel, search_kernel
-from repro.kernels import page_kernel, sort_kernel
+from repro.kernels import page_kernel, segment_kernel, sort_kernel
 from repro.kernels import ref as kref
 
 
@@ -98,7 +98,7 @@ _COMMON_DEFAULTS = {
 #: block_rows gets the extra pow2 check on top of the sublane multiple.
 _SORT_FAMILY = (
     "sort", "sort_kv", "argsort", "sort_batched", "argsort_batched", "topk",
-    "merge", "merge_kv", "nucleus_mask",
+    "merge", "merge_kv", "nucleus_mask", "segmented_sort",
 )
 
 
@@ -867,6 +867,69 @@ minmax_histogram_p = register(Primitive(
 bincount_p = register(Primitive(
     "bincount", _bincount_impl, None,
     doc="integer-id counts in [0, nbins) via segment_sum (both backends)",
+))
+
+# -- segmented primitives over CSR (offsets, values) pairs -----------------
+# The ragged generalisation of accumulate/mapreduce/sort (DESIGN.md §10):
+# one independent scan/reduce/sort per CSR row, empty rows legal anywhere.
+# The MoE bucketed dispatch (models/moe.py) is the resident proof case.
+
+def _jnp_segmented_reduce(values, offsets, *, op, init):
+    return segment_kernel.segmented_reduce_ref(op, values, offsets, init=init)
+
+
+def _pallas_segmented_reduce(values, offsets, *, op, init):
+    if values.ndim > 1:
+        # feature-lane values (the MoE combine) take the portable flagged
+        # path on every backend; the blocked kernel is 1-D
+        return segment_kernel.segmented_reduce_ref(
+            op, values, offsets, init=init
+        )
+    return segment_kernel.segmented_reduce_blocks(op, values, offsets,
+                                                  init=init)
+
+
+def _jnp_segmented_scan(values, offsets, *, op, init, inclusive=True):
+    return segment_kernel.segmented_scan_ref(
+        op, values, offsets, unit=init, exclusive=not inclusive
+    )
+
+
+def _pallas_segmented_scan(values, offsets, *, op, init, inclusive=True):
+    if values.ndim > 1:
+        return segment_kernel.segmented_scan_ref(
+            op, values, offsets, unit=init, exclusive=not inclusive
+        )
+    return segment_kernel.segmented_scan_blocks(
+        op, values, offsets, unit=init, exclusive=not inclusive
+    )
+
+
+def _jnp_segmented_sort(values, offsets, payload=None):
+    return segment_kernel.segmented_sort_ref(values, offsets, payload)
+
+
+def _pallas_segmented_sort(values, offsets, payload=None):
+    return segment_kernel.segmented_sort_blocks(values, offsets, payload)
+
+
+segmented_reduce_p = register(Primitive(
+    "segmented_reduce", _jnp_segmented_reduce, _pallas_segmented_reduce,
+    doc="per-CSR-segment reduce of (values, offsets) -> (S,) — one flagged "
+        "scan pass + segment-end gather on TPU; segment_sum oracle for add",
+))
+
+segmented_scan_p = register(Primitive(
+    "segmented_scan", _jnp_segmented_scan, _pallas_segmented_scan,
+    doc="per-CSR-segment prefix scan (inclusive/exclusive): the dense scan "
+        "kernel's carry machinery over (flag, value) pairs, single pass",
+))
+
+segmented_sort_p = register(Primitive(
+    "segmented_sort", _jnp_segmented_sort, _pallas_segmented_sort,
+    tunables=_SORT_TUNABLES,
+    doc="per-CSR-segment sort (optional payload): one bitonic kv pass with "
+        "segment ids as major key; type-max tail masking like merge",
 ))
 
 page_gather_p = register(Primitive(

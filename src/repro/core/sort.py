@@ -27,6 +27,7 @@ _sort_batched = registry.get("sort_batched")
 _argsort_batched = registry.get("argsort_batched")
 _topk = registry.get("topk")
 _nucleus_mask = registry.get("nucleus_mask")
+_segmented_sort = registry.get("segmented_sort")
 
 
 def merge_sort(x, *, descending: bool = False, backend: str | None = None):
@@ -142,6 +143,24 @@ def nucleus_mask(x, *, top_p: float, backend: str | None = None):
     (kernels/nucleus_kernel.py). ``top_p`` is static (host float).
     """
     return _nucleus_mask(x, top_p=float(top_p), backend=backend)
+
+
+def segmented_sort(values, offsets, *, vals=None,
+                   backend: str | None = None):
+    """Sort each CSR segment of 1-D ``values`` independently, ascending —
+    the ragged ``merge_sort`` (DESIGN.md §10).
+
+    ``offsets`` follows the CSR contract (length ``S + 1``, ``offsets[0] ==
+    0``, ``offsets[-1] == len(values)``; empty segments legal). With
+    ``vals`` (same-length payload) returns ``(sorted_values, payload)``
+    with equal values keeping their original relative order (stable, like
+    ``sortperm``); without, returns the sorted values. On TPU this is ONE
+    pass of the existing bitonic hyper-block network with segment ids as
+    the major key — dispatch-as-sort, no per-segment launches.
+    """
+    if vals is None:
+        return _segmented_sort(values, offsets, backend=backend)
+    return _segmented_sort(values, offsets, vals, backend=backend)
 
 
 def topk(x, k: int, *, backend: str | None = None):

@@ -13,14 +13,22 @@ is literally a distributed key-sort of (expert_id, token) pairs —
                                fixed-capacity idiom as core.distributed.sihsort
 
 Two execution modes:
-  * ``moe_ffn``     — single-program (pjit/GSPMD) path: dispatch via gather/
-    scatter on the global token axis. Used by smoke tests and small meshes.
+  * ``moe_ffn``     — single-program (pjit/GSPMD) path. Default dispatch is
+    **bucketed** (DESIGN.md §10): tokens are gathered expert-contiguously
+    straight from the sortperm — no zero-padded ``(E*C, d)`` buffer and no
+    full-width scatter-add pair — the expert FFN runs over the ragged
+    buckets via ``lax.ragged_dot`` with the bincount as group sizes, and
+    the per-token combine is ONE ``ak.segmented_reduce`` over the uniform
+    top-k segments. ``dispatch="padded"`` keeps the old capacity-padded
+    scatter path (same drop policy; the equivalence is tested).
   * ``moe_ffn_ep``  — shard_map expert-parallel path: tokens sequence-sharded
     over the ``model`` axis, experts sharded over the same axis, dispatch via
-    all_to_all (DeepSpeed-MoE-style EP mapped to TPU collectives).
+    all_to_all (DeepSpeed-MoE-style EP mapped to TPU collectives). Stays on
+    the padded layout: ``all_to_all`` needs static per-expert extents, which
+    is exactly what capacity padding buys.
 
-Both are differentiable (gather/scatter/all_to_all all have transposes) and
-return the router load-balance auxiliary loss.
+Both are differentiable (gather/scatter/ragged_dot/all_to_all all have
+transposes) and return the router load-balance auxiliary loss.
 """
 from __future__ import annotations
 
@@ -55,6 +63,22 @@ ROUTING_TUNING = registry.tuning.register_preset("moe_routing", {
     # any cut-off where the sort-derived path beats lax.top_k
     "topk": {"switch_below": 2048},
 })
+
+# The bucketed-dispatch preset: the segmented primitives the combine (and
+# any caller-side bucket analytics) run under. Same size logic as the
+# routing preset — dispatch arrays are (T·k,)-sized — and same layering:
+# an attached autotune cache overrides these per (dtype, size-class), and
+# repro.tune seeds its cache from this profile.
+DISPATCH_TUNING = registry.tuning.register_preset("moe_dispatch", {
+    "segmented_reduce": {"switch_below": 2048},
+    "segmented_scan": {"switch_below": 2048},
+    "segmented_sort": {"switch_below": 2048},
+})
+
+#: ``lax.ragged_dot`` (grouped matmul over contiguous row buckets) is what
+#: makes static-shape bucketed expert FFNs possible; fall back to the padded
+#: layout on jax builds without it.
+_HAS_RAGGED_DOT = hasattr(jax.lax, "ragged_dot")
 
 
 def moe_init(rng, cfg):
@@ -117,9 +141,27 @@ def _expert_ffn(p, xe, constrain=False):
     return jnp.einsum("ecf,efd->ecd", h, wd)
 
 
+def _expert_ffn_bucketed(p, xs, group_sizes, constrain=False):
+    """xs: (N, d) expert-contiguous rows -> (N, d); ``group_sizes`` (E,)
+    marks each expert's contiguous bucket. ``lax.ragged_dot`` applies
+    expert ``e``'s weights to exactly its bucket — no capacity padding,
+    activation traffic proportional to N = T·k instead of E·C."""
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    if constrain:
+        wg = SH.gather_weight(wg, "model", None, None)
+        wu = SH.gather_weight(wu, "model", None, None)
+        wd = SH.gather_weight(wd, "model", None, None)
+    gs = group_sizes.astype(jnp.int32)
+    h = jax.nn.silu(jax.lax.ragged_dot(xs, wg, gs))
+    h = h * jax.lax.ragged_dot(xs, wu, gs)
+    return jax.lax.ragged_dot(h, wd, gs)
+
+
 def _dispatch_indices(cfg, ids, T, capacity):
     """The AK-primitive routing core: sort (expert, token) pairs and assign
-    capacity slots. Returns (perm, slot, keep) over the (T*k,) flat axis."""
+    capacity slots. Returns ``(perm, slot, keep, sorted_ids, counts,
+    offsets)`` over the (T*k,) flat axis — counts/offsets are the CSR
+    description of the expert buckets the bucketed path consumes."""
     k = cfg.top_k
     flat_ids = ids.reshape(-1)  # (T*k,)
     with registry.tuning.preset("moe_routing"):
@@ -132,11 +174,32 @@ def _dispatch_indices(cfg, ids, T, capacity):
     pos_in_expert = jnp.arange(T * k, dtype=jnp.int32) - offsets[sorted_ids]
     keep = pos_in_expert < capacity
     slot = sorted_ids * capacity + jnp.minimum(pos_in_expert, capacity - 1)
-    return perm, slot, keep, sorted_ids
+    return perm, slot, keep, sorted_ids, counts, offsets
 
 
-def moe_ffn(p, cfg, x, *, capacity_factor=None):
-    """Single-program MoE FFN. x: (B, S, d) -> (y, aux_loss)."""
+def _scatter_to_slots(rows, slot, keep, n_slots):
+    """Scatter kept ``rows`` into their capacity slots; dropped rows land in
+    a GHOST row (index ``n_slots``) that is sliced off — slot ``n_slots-1``
+    can never silently absorb dropped traffic, and one mask suffices."""
+    buf = jnp.zeros((n_slots + 1, rows.shape[1]), rows.dtype)
+    buf = buf.at[jnp.where(keep, slot, n_slots)].add(
+        jnp.where(keep[:, None], rows, 0)
+    )
+    return buf[:n_slots]
+
+
+def moe_ffn(p, cfg, x, *, capacity_factor=None, dispatch=None):
+    """Single-program MoE FFN. x: (B, S, d) -> (y, aux_loss).
+
+    ``dispatch``: ``"bucketed"`` (default when ``lax.ragged_dot`` exists)
+    gathers tokens expert-contiguously and combines with
+    ``ak.segmented_reduce``; ``"padded"`` keeps the capacity-padded
+    scatter/gather layout. Both apply the identical capacity drop policy.
+    """
+    if dispatch is None:
+        dispatch = "bucketed" if _HAS_RAGGED_DOT else "padded"
+    if dispatch not in ("bucketed", "padded"):
+        raise ValueError(f"unknown dispatch {dispatch!r}")
     B, S, d = x.shape
     T = B * S
     k = cfg.top_k
@@ -146,26 +209,40 @@ def moe_ffn(p, cfg, x, *, capacity_factor=None):
     xf = x.reshape(T, d)
     ids, gates, occ, imp = _route(p, cfg, xf)
     aux = _aux_loss(cfg, occ, imp)
-    perm, slot, keep, _ = _dispatch_indices(cfg, ids, T, capacity)
+    perm, slot, keep, _, counts, _ = _dispatch_indices(cfg, ids, T, capacity)
 
     token_of = perm // k  # which token each sorted (token,choice) belongs to
     gate_of = gates.reshape(-1)[perm]
 
-    # scatter tokens into (E*C, d) expert buffers (dropped tokens masked)
-    buf = jnp.zeros((cfg.n_experts * capacity, d), x.dtype)
-    src = jnp.where(keep[:, None], xf[token_of], 0)
-    buf = buf.at[jnp.where(keep, slot, cfg.n_experts * capacity - 1)].add(
-        jnp.where(keep[:, None], src, 0)
-    )
-    ye = _expert_ffn(p, buf.reshape(cfg.n_experts, capacity, d),
-                     constrain=True)
-    ye = ye.reshape(cfg.n_experts * capacity, d)
+    if dispatch == "bucketed":
+        # gather expert-contiguous buckets straight off the sortperm —
+        # O(T·k·d) moved, independent of capacity; no (E*C, d) buffer
+        xs = xf[token_of]  # (T*k, d), rows of expert e contiguous
+        ys = _expert_ffn_bucketed(p, xs, counts, constrain=True)
+        contrib = jnp.where(keep[:, None], ys * gate_of[:, None], 0)
+        # back to token-major order, then the per-token top-k combine is a
+        # segmented reduce over the uniform k-wide CSR rows
+        inv = jnp.zeros((T * k,), jnp.int32).at[perm].set(
+            jnp.arange(T * k, dtype=jnp.int32)
+        )
+        tok_offsets = jnp.arange(T + 1, dtype=jnp.int32) * k
+        with registry.tuning.preset("moe_dispatch"):
+            out = ak.segmented_reduce(
+                jnp.add, contrib[inv], tok_offsets, init=0
+            )
+    else:
+        # capacity-padded layout: scatter into (E*C, d) expert buffers
+        # (drops -> ghost row), batched dense FFN, gather+scatter combine
+        buf = _scatter_to_slots(xf[token_of], slot, keep,
+                                cfg.n_experts * capacity)
+        ye = _expert_ffn(p, buf.reshape(cfg.n_experts, capacity, d),
+                         constrain=True)
+        ye = ye.reshape(cfg.n_experts * capacity, d)
+        out = jnp.zeros((T, d), x.dtype)
+        contrib = jnp.where(keep[:, None], ye[slot] * gate_of[:, None], 0)
+        out = out.at[token_of].add(contrib)
 
-    # combine: gather each kept (token, choice) result, weight, scatter-add
-    out = jnp.zeros((T, d), x.dtype)
-    contrib = jnp.where(keep[:, None], ye[slot] * gate_of[:, None], 0)
-    out = out.at[token_of].add(contrib)
-
+    out = out.astype(x.dtype)
     if cfg.n_shared_experts:
         out = out + L.swiglu(p["shared"], xf)
     return out.reshape(B, S, d), aux
@@ -220,14 +297,12 @@ def moe_ffn_ep(
             occ = jax.lax.pmean(occ, ax)
             imp = jax.lax.pmean(imp, ax)
         aux = _aux_loss(cfg, occ, imp)
-        perm, slot, keep, _ = _dispatch_indices(cfg, ids, T_l, capacity)
+        perm, slot, keep, _, _, _ = _dispatch_indices(cfg, ids, T_l, capacity)
         token_of = perm // k
         gate_of = gates.reshape(-1)[perm]
 
-        buf = jnp.zeros((cfg.n_experts * capacity, d), xl.dtype)
-        buf = buf.at[jnp.where(keep, slot, cfg.n_experts * capacity - 1)].add(
-            jnp.where(keep[:, None], xf[token_of], 0)
-        )
+        buf = _scatter_to_slots(xf[token_of], slot, keep,
+                                cfg.n_experts * capacity)
         # (E, C, d) -> exchange so each device gets its local experts' tokens
         # from every peer: (ep, E_l, C, d) --all_to_all--> same shape, where
         # leading axis indexes the source peer.

@@ -74,17 +74,26 @@ BATCHED_PRIMITIVES = ("sort_batched", "argsort_batched", "topk",
                       "nucleus_mask")
 MERGE_PRIMITIVES = ("merge", "merge_kv")
 PAGED_PRIMITIVES = ("page_gather",)
+SEGMENTED_PRIMITIVES = ("segmented_reduce", "segmented_scan",
+                        "segmented_sort")
 TUNED_PRIMITIVES = (
     STREAM_PRIMITIVES + SORT_PRIMITIVES + BATCHED_PRIMITIVES
-    + MERGE_PRIMITIVES + PAGED_PRIMITIVES
+    + MERGE_PRIMITIVES + PAGED_PRIMITIVES + SEGMENTED_PRIMITIVES
 )
 
 #: Primitives whose Pallas path carries a same-size payload lane next to
 #: the keys (values / indices): twice the modelled HBM traffic.
+#: segmented_sort qualifies — its kv network sorts values beside the
+#: segment-id keys.
 _PAYLOAD = (
     "sort_kv", "argsort", "merge_kv", "argsort_batched", "topk",
-    "nucleus_mask",
+    "nucleus_mask", "segmented_sort",
 )
+
+#: Segments the segmented-primitive operands are cut into (~64-element mean
+#: segment — ragged, deterministic, empty segments included by construction
+#: when two cuts collide).
+SEGMENT_MEAN = 64
 
 #: Merge geometry the model assumes (the distributed finish's run count).
 MERGE_RUNS = 8
@@ -211,6 +220,9 @@ def modelled_time(name: str, backend: str, n: int, itemsize: int,
         return pallas_model_time(hbm, launches)
     padded = KC.round_up(n, block)
     hbm = 2 * padded * itemsize
+    if name in ("segmented_reduce", "segmented_scan"):
+        # the flagged scan streams an int32 head-flag lane beside the values
+        hbm += padded * 4
     if name in _PAYLOAD:
         hbm *= 2
     return pallas_model_time(hbm, 1)
@@ -297,6 +309,18 @@ def make_operands(name: str, n: int, dtype,
             return (k2,), {"nruns": MERGE_RUNS}
         v = jnp.arange(k2.shape[0], dtype=jnp.int32)
         return (k2, v), {"nruns": MERGE_RUNS}
+    if name in SEGMENTED_PRIMITIVES:
+        # ragged CSR offsets from sorted random cuts: deterministic, mean
+        # segment ~SEGMENT_MEAN elements, empty segments whenever two cuts
+        # coincide — the shapes the MoE expert buckets actually take
+        nseg = max(n // SEGMENT_MEAN, 2)
+        cuts = np.sort(rng.integers(0, n + 1, size=nseg - 1))
+        offsets = jnp.asarray(
+            np.concatenate([[0], cuts, [n]]).astype(np.int32)
+        )
+        if name == "segmented_sort":
+            return (x, offsets), {}
+        return (x, offsets), {"op": _plus, "init": _host_zero(dt)}
     raise KeyError(f"no operand recipe for primitive {name!r}")
 
 

@@ -1,0 +1,374 @@
+"""Segmented primitives: CSR ragged extremes, stability, backend agreement.
+
+Pins the PR-8 acceptance criteria:
+  * segmented_reduce / segmented_scan / segmented_sort match per-segment
+    numpy references on arbitrary ragged layouts — empty segments anywhere,
+    a single segment, and the all-tokens-one-expert extreme;
+  * the payload variant of segmented_sort is STABLE (equal values keep
+    their original relative order), matching the lexsort oracle bitwise;
+  * jnp and pallas backends agree BITWISE across f32/i32/bf16 on
+    exact-arithmetic data (integer-valued floats small enough that every
+    partial sum is exactly representable, so any association order yields
+    identical bits) and allclose on generic float data;
+  * moe_ffn's bucketed dispatch equals the padded scatter path — outputs
+    allclose, aux loss identical, capacity drop policy matched.
+
+Property checks are shared between a deterministic seeded sweep (runs
+everywhere) and hypothesis-driven generation (when the optional dep is
+installed) — the test_paging.py pattern.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as ak
+from repro.core import registry
+
+# hypothesis is an optional test dep (same pattern as test_paging.py):
+# the property bodies below run under a seeded sweep regardless.
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised in minimal containers
+    given = None
+
+BACKENDS = ["jnp", "pallas"]
+
+
+def _offsets(lengths):
+    return jnp.asarray(np.cumsum([0] + list(lengths)).astype(np.int32))
+
+
+def _per_segment(np_vals, lengths):
+    out, start = [], 0
+    for ln in lengths:
+        out.append(np_vals[start:start + ln])
+        start += ln
+    return out
+
+
+def _seeded_layout(seed):
+    """Deterministic ragged layout + float values: raggedness, empties and
+    single-segment shapes all arise across the sweep's seeds."""
+    rng = np.random.default_rng(seed)
+    lengths = [int(v) for v in rng.integers(0, 25, size=rng.integers(1, 13))]
+    vals = (rng.standard_normal(sum(lengths)) * 100).astype(np.float32)
+    return lengths, vals
+
+
+# ---------------------------------------------------------------------------
+# shared property bodies (per-segment numpy references)
+# ---------------------------------------------------------------------------
+
+
+def _check_reduce(lengths, vals, backend):
+    v, off = jnp.asarray(vals), _offsets(lengths)
+    got = np.asarray(
+        ak.segmented_reduce(jnp.add, v, off, init=0.0, backend=backend)
+    )
+    want = [s.sum() if len(s) else 0.0 for s in _per_segment(vals, lengths)]
+    np.testing.assert_allclose(got, np.asarray(want, np.float32),
+                               rtol=1e-4, atol=1e-3)
+    # non-additive op exercises the flagged-scan path on both backends
+    got_max = np.asarray(ak.segmented_reduce(
+        jnp.maximum, v, off, init=float("-inf"), backend=backend
+    ))
+    want_max = [s.max() if len(s) else -np.inf
+                for s in _per_segment(vals, lengths)]
+    np.testing.assert_array_equal(got_max, np.asarray(want_max, np.float32))
+
+
+def _check_scan(lengths, vals, backend):
+    v, off = jnp.asarray(vals), _offsets(lengths)
+    incl = np.asarray(
+        ak.segmented_scan(jnp.add, v, off, init=0.0, backend=backend)
+    )
+    want = np.concatenate(
+        [np.cumsum(s, dtype=np.float32) for s in _per_segment(vals, lengths)]
+        or [np.zeros(0, np.float32)]
+    )
+    np.testing.assert_allclose(incl, want, rtol=1e-4, atol=1e-3)
+    # exclusive: heads read init, everything else its predecessor
+    excl = np.asarray(ak.segmented_scan(
+        jnp.add, v, off, init=0.0, inclusive=False, backend=backend
+    ))
+    pos = 0
+    for s in _per_segment(vals, lengths):
+        if len(s):
+            assert excl[pos] == 0.0
+            np.testing.assert_allclose(
+                excl[pos + 1:pos + len(s)], incl[pos:pos + len(s) - 1],
+                rtol=1e-5
+            )
+        pos += len(s)
+
+
+def _check_sort(lengths, vals, backend):
+    v, off = jnp.asarray(vals), _offsets(lengths)
+    got = np.asarray(ak.segmented_sort(v, off, backend=backend))
+    want = np.concatenate(
+        [np.sort(s) for s in _per_segment(vals, lengths)]
+        or [np.zeros(0, np.float32)]
+    )
+    np.testing.assert_array_equal(got, want)  # sorting moves bits, exactly
+
+
+def _check_sort_kv_stable(lengths, small_ints, backend):
+    """Payload variant with heavy ties: must equal the iota-tie-broken
+    lexsort oracle EXACTLY, payload included — that IS stability."""
+    n = sum(lengths)
+    v = jnp.asarray(np.asarray(small_ints, np.int32))
+    off = _offsets(lengths)
+    payload = jnp.arange(n, dtype=jnp.int32)
+    sv, sp = ak.segmented_sort(v, off, vals=payload, backend=backend)
+    ids = np.repeat(np.arange(len(lengths)), lengths)
+    perm = np.lexsort((np.arange(n), np.asarray(v), ids))
+    np.testing.assert_array_equal(np.asarray(sv), np.asarray(v)[perm])
+    np.testing.assert_array_equal(np.asarray(sp), perm.astype(np.int32))
+
+
+# Integer-valued data keeps float addition EXACT under any association
+# order: f32 holds integers to 2^24, bf16 only to 256 — bounds chosen so
+# the worst-case running magnitude stays inside each format's exact range.
+_EXACT = {
+    "int32": (np.int32, 1000),
+    "float32": (np.float32, 1000),
+    "bfloat16": (np.float32, 4),  # cast to bf16 below; |sum| <= 25*4 < 256
+}
+
+
+def _check_bitwise(lengths, ints, dtype):
+    npdt, _ = _EXACT[dtype]
+    v = jnp.asarray(np.asarray(ints, npdt))
+    if dtype == "bfloat16":
+        v = v.astype(jnp.bfloat16)
+    off = _offsets(lengths)
+    init = 0 if dtype == "int32" else 0.0
+    for name, kw in (
+        ("segmented_reduce", dict(op=jnp.add, init=init)),
+        ("segmented_scan", dict(op=jnp.add, init=init)),
+        ("segmented_sort", {}),
+    ):
+        a = registry.call(name, v, off, backend="jnp", **kw)
+        b = registry.call(name, v, off, backend="pallas", **kw)
+        assert a.dtype == b.dtype == v.dtype
+        assert bool((a == b).all()), (name, dtype, a, b)
+
+
+# ---------------------------------------------------------------------------
+# seeded sweeps — run everywhere
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_segmented_seeded_sweep(backend):
+    for seed in range(6):
+        lengths, vals = _seeded_layout(seed)
+        _check_reduce(lengths, vals, backend)
+        _check_scan(lengths, vals, backend)
+        _check_sort(lengths, vals, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_segmented_sort_kv_stable_seeded(backend):
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        lengths = [int(v) for v in rng.integers(0, 25,
+                                                size=rng.integers(1, 13))]
+        ints = rng.integers(0, 4, size=sum(lengths))  # heavy ties
+        _check_sort_kv_stable(lengths, ints, backend)
+
+
+@pytest.mark.parametrize("dtype", sorted(_EXACT))
+def test_backends_agree_bitwise_seeded(dtype):
+    _, bound = _EXACT[dtype]
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        lengths = [int(v) for v in rng.integers(0, 25,
+                                                size=rng.integers(1, 13))]
+        ints = rng.integers(-bound, bound + 1, size=sum(lengths))
+        _check_bitwise(lengths, ints, dtype)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven generation (optional dep)
+# ---------------------------------------------------------------------------
+
+if given is not None:
+    seg_lengths = st.lists(
+        st.integers(min_value=0, max_value=24), min_size=1, max_size=12
+    )
+    finite_f32 = st.floats(
+        min_value=-1e4, max_value=1e4, allow_nan=False,
+        allow_infinity=False, allow_subnormal=False, width=32,
+    )
+
+    def _draw_vals(data, n):
+        return np.asarray(
+            data.draw(st.lists(finite_f32, min_size=n, max_size=n)),
+            np.float32,
+        )
+
+    @given(lengths=seg_lengths, data=st.data(),
+           backend=st.sampled_from(BACKENDS))
+    @settings(max_examples=20, deadline=None)
+    def test_segmented_reduce_property(lengths, data, backend):
+        _check_reduce(lengths, _draw_vals(data, sum(lengths)), backend)
+
+    @given(lengths=seg_lengths, data=st.data(),
+           backend=st.sampled_from(BACKENDS))
+    @settings(max_examples=20, deadline=None)
+    def test_segmented_scan_property(lengths, data, backend):
+        _check_scan(lengths, _draw_vals(data, sum(lengths)), backend)
+
+    @given(lengths=seg_lengths, data=st.data(),
+           backend=st.sampled_from(BACKENDS))
+    @settings(max_examples=20, deadline=None)
+    def test_segmented_sort_property(lengths, data, backend):
+        _check_sort(lengths, _draw_vals(data, sum(lengths)), backend)
+
+    @given(lengths=seg_lengths, data=st.data(),
+           backend=st.sampled_from(BACKENDS))
+    @settings(max_examples=20, deadline=None)
+    def test_segmented_sort_kv_stable_property(lengths, data, backend):
+        n = sum(lengths)
+        ints = data.draw(st.lists(
+            st.integers(min_value=0, max_value=3), min_size=n, max_size=n
+        ))
+        _check_sort_kv_stable(lengths, ints, backend)
+
+    @given(lengths=seg_lengths, data=st.data(),
+           dtype=st.sampled_from(sorted(_EXACT)))
+    @settings(max_examples=20, deadline=None)
+    def test_backends_agree_bitwise_property(lengths, data, dtype):
+        n = sum(lengths)
+        _, bound = _EXACT[dtype]
+        ints = data.draw(st.lists(
+            st.integers(min_value=-bound, max_value=bound),
+            min_size=n, max_size=n,
+        ))
+        _check_bitwise(lengths, ints, dtype)
+
+
+# ---------------------------------------------------------------------------
+# ragged extremes (explicit, not generated)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_segments_empty(backend):
+    off = jnp.zeros((6,), jnp.int32)  # 5 empty segments, n = 0
+    v = jnp.zeros((0,), jnp.float32)
+    r = ak.segmented_reduce(jnp.add, v, off, init=0.0, backend=backend)
+    np.testing.assert_array_equal(np.asarray(r), np.zeros(5, np.float32))
+    assert ak.segmented_scan(jnp.add, v, off, init=0.0,
+                             backend=backend).shape == (0,)
+    assert ak.segmented_sort(v, off, backend=backend).shape == (0,)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_tokens_one_segment(backend):
+    """The all-tokens-one-expert extreme: every element in the LAST segment,
+    all preceding segments empty."""
+    n, nseg = 100, 8
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    off = jnp.asarray([0] * nseg + [n], jnp.int32)
+    r = np.asarray(
+        ak.segmented_reduce(jnp.add, v, off, init=0.0, backend=backend)
+    )
+    np.testing.assert_allclose(r[:-1], 0.0)
+    np.testing.assert_allclose(r[-1], np.asarray(v).sum(), rtol=1e-5)
+    s = np.asarray(ak.segmented_sort(v, off, backend=backend))
+    np.testing.assert_array_equal(s, np.sort(np.asarray(v)))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_single_segment_equals_dense_primitives(backend):
+    """One segment == the dense accumulate/merge_sort."""
+    rng = np.random.default_rng(4)
+    v = jnp.asarray(rng.standard_normal(257), jnp.float32)
+    off = jnp.asarray([0, 257], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(ak.segmented_scan(jnp.add, v, off, init=0.0,
+                                     backend=backend)),
+        np.asarray(ak.accumulate(jnp.add, v, init=0.0, backend=backend)),
+        rtol=1e-5, atol=1e-5,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ak.segmented_sort(v, off, backend=backend)),
+        np.asarray(ak.merge_sort(v, backend=backend)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# moe_ffn: bucketed dispatch == padded scatter path
+# ---------------------------------------------------------------------------
+
+
+def _moe_cfg():
+    from repro.configs import load_smoke_config
+
+    return dataclasses.replace(
+        load_smoke_config("granite_moe_1b"), dtype=jnp.float32
+    )
+
+
+@pytest.mark.skipif(not hasattr(jax.lax, "ragged_dot"),
+                    reason="jax build without lax.ragged_dot")
+@pytest.mark.parametrize("capacity_factor", [None, 0.25])
+def test_moe_bucketed_equals_padded(capacity_factor):
+    """Same outputs (allclose), identical aux loss, matched drop policy —
+    with and without capacity drops."""
+    from repro.models import moe as MOE
+
+    cfg = _moe_cfg()
+    p = MOE.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32)
+    kw = {} if capacity_factor is None else {
+        "capacity_factor": capacity_factor
+    }
+    y_b, aux_b = MOE.moe_ffn(p, cfg, x, dispatch="bucketed", **kw)
+    y_p, aux_p = MOE.moe_ffn(p, cfg, x, dispatch="padded", **kw)
+    np.testing.assert_allclose(np.asarray(y_b), np.asarray(y_p),
+                               rtol=2e-4, atol=2e-5)
+    assert float(aux_b) == float(aux_p)  # routing is shared, bit-identical
+
+
+@pytest.mark.skipif(not hasattr(jax.lax, "ragged_dot"),
+                    reason="jax build without lax.ragged_dot")
+def test_moe_bucketed_differentiable():
+    from repro.models import moe as MOE
+
+    cfg = _moe_cfg()
+    p = MOE.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model),
+                          jnp.float32)
+
+    def loss(p):
+        y, aux = MOE.moe_ffn(p, cfg, x, dispatch="bucketed")
+        return jnp.sum(y * y) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    assert all(np.isfinite(np.asarray(a)).all() for a in jax.tree.leaves(g))
+    assert float(jnp.abs(g["w_down"]).sum()) > 0  # experts get gradient
+    assert float(jnp.abs(g["router"]).sum()) > 0
+
+
+def test_padded_drops_never_hit_last_slot():
+    """The satellite fix: dropped rows land in a ghost row, so with a full
+    last slot the scatter sum of slot E*C-1 equals exactly its kept rows."""
+    from repro.models import moe as MOE
+
+    rows = jnp.asarray(np.arange(10, dtype=np.float32)[:, None] + 1.0)
+    slot = jnp.asarray([0, 1, 2, 3, 3, 3, 3, 3, 3, 3], jnp.int32)
+    keep = jnp.asarray([1, 1, 1, 1, 0, 0, 0, 0, 0, 0], bool)
+    buf = MOE._scatter_to_slots(rows, slot, keep, 4)
+    assert buf.shape == (4, 1)
+    # rows 4..9 were dropped: slot 3 holds ONLY row 3's value
+    np.testing.assert_array_equal(
+        np.asarray(buf[:, 0]), np.asarray([1.0, 2.0, 3.0, 4.0])
+    )
