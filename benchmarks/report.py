@@ -265,6 +265,52 @@ def serving_table(json_path=None):
     return "\n".join(lines)
 
 
+def obs_table(json_path=None):
+    """Observability trajectory (the ``obs`` sub-entry of
+    BENCH_serve.json, DESIGN.md §11): whether the telemetry-on run stayed
+    bitwise identical to telemetry-off, the per-primitive launch tally it
+    attributed, and the span/instant inventory of the exported Perfetto
+    trace. Entries predating the telemetry tier show '-'. Missing/invalid
+    files degrade to a hint line, never an error."""
+    path = json_path or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_serve.json",
+    )
+    if not os.path.exists(path):
+        return (f"(no serving trajectory at {path}; populate with "
+                f"`PYTHONPATH=src python -m benchmarks.serving`)")
+    lines = [
+        "| arch | tokens identical | launches (attributed) | trace spans "
+        "(ak.* / attributed) | instants | preempt/retries/faults |",
+        "|---|---|---|---|---|---|",
+    ]
+    try:
+        with open(path) as f:
+            entries = json.load(f)["entries"]
+        for e in entries:
+            ob = e.get("obs") or {}
+            if not ob:
+                lines.append(f"| {e.get('arch')} | - | - | - | - | - |")
+                continue
+            la = ob.get("launches") or {}
+            launches = ", ".join(
+                f"{k}={v}" for k, v in sorted(la.items())) or "0"
+            lines.append(
+                f"| {e.get('arch')} | "
+                f"{'yes' if ob.get('tokens_identical') else 'NO'} | "
+                f"{launches} | {ob.get('trace_spans')} "
+                f"({ob.get('primitive_spans')} / "
+                f"{ob.get('attributed_spans')}) | "
+                f"{len(ob.get('instants') or [])} | "
+                f"{ob.get('preemptions')}/{ob.get('step_retries')}/"
+                f"{ob.get('faults_injected')} |"
+            )
+    except (OSError, json.JSONDecodeError, KeyError, TypeError,
+            AttributeError) as e:
+        return f"(serving trajectory at {path} unreadable: {e})"
+    return "\n".join(lines)
+
+
 def moe_dispatch_table(json_path=None):
     """MoE dispatch trajectory (BENCH_moe.json): modelled HBM bytes of the
     capacity-padded vs bucketed layouts at the gate config, the byte
@@ -375,6 +421,8 @@ def main():
             json.dump(rows, f, indent=1, default=float)
     parts += ["\n\n## Serving (continuous-batching engine)\n",
               serving_table(args.serve_json)]
+    parts += ["\n\n## Observability (telemetry overhead gate)\n",
+              obs_table(args.serve_json)]
     parts += ["\n\n## MoE dispatch (bucketed vs capacity-padded)\n",
               moe_dispatch_table(args.moe_json)]
     parts += ["\n\n## Tuned vs default (autotune cache)\n",

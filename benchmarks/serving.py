@@ -33,6 +33,12 @@ Asserted here (and re-run by the CI ``serve-smoke`` + ``bench-smoke`` jobs):
     identical to the fault-free contiguous reference, the page pool is
     fully free at exit, and the whole run reproduces itself exactly when
     repeated with a fresh copy of the same plan.
+  * **obs gate** — the telemetry tier (runtime/telemetry.py, DESIGN.md
+    §11) is observationally invisible: the same sampled chaos-flavoured
+    run with tracing on yields bitwise-identical tokens and identical
+    per-primitive launch counts vs tracing off, while exporting a
+    schema-valid Perfetto trace whose spans carry launch/modelled-byte
+    attribution and whose ``snapshot()`` agrees with the legacy counters.
 
 The engine runs are greedy (temperature 0) on a smoke config so every
 number below is deterministic across machines; wall-clock tok/s is
@@ -291,6 +297,135 @@ def _chaos_gate(params, cfg, *, slots, prompt_len, max_new, cache_len):
     return entry
 
 
+def _obs_gate(params, cfg, *, slots, prompt_len, max_new, cache_len):
+    """Telemetry overhead + fidelity gate (DESIGN.md §11): the SAME
+    chaos-flavoured sampled run with telemetry off and on must produce
+    bitwise-identical tokens and identical per-primitive launch counts
+    (observability never perturbs the computation); the on-run's trace
+    must be valid Perfetto JSON whose spans actually carry the launch/
+    modelled-byte attribution, and ``ak.telemetry.snapshot()`` must agree
+    with the legacy accessors it absorbs. Returns the deterministic obs
+    sub-entry for the trajectory (counts only — no timestamps, so the
+    skip-if-identical compare stays meaningful)."""
+    from repro.core import dispatch, registry
+    from repro.kernels import common as KC
+    from repro.launch.engine import Engine, Request
+    from repro.runtime import faults, telemetry
+    from repro.runtime.supervisor import Supervisor
+
+    # sampled decode (temperature > 0): greedy argmax short-circuits the
+    # AK sampler entirely, so only a sampled run puts sort/scan/search on
+    # the per-step hot path. Per-request rng (fold_in(seed, rid, idx))
+    # keeps the tokens bitwise deterministic anyway. The whole gate runs
+    # under the pallas dispatch scope (the launch gate's idiom) so the
+    # hot-path primitives actually issue countable pallas launches to
+    # attribute — both compared runs share the scope, so the on/off
+    # comparison is apples to apples.
+    rng = np.random.default_rng(7)
+    prompts = {
+        i: rng.integers(0, cfg.vocab, (1 + i % prompt_len,)).astype(np.int32)
+        for i in range(4)
+    }
+
+    def plan():
+        return faults.FaultPlan.scripted(
+            faults.Fault("engine.decode", 2),
+        )
+
+    def run_once():
+        # fresh registry jit caches + a zeroed launch counter: both runs
+        # retrace the SAME set of wrappers, so trace-time launch counting
+        # is comparable between them
+        registry.clear_caches()
+        KC.reset_launch_count()
+        eng = Engine(
+            params, cfg, slots=slots, cache_len=cache_len,
+            prompt_pad=prompt_len, temperature=0.8, top_k=4, top_p=0.9,
+            paged=True, page_size=PAGE_SIZE, defrag_every=1,
+            preempt=True, preempt_script={2: 0},
+            supervisor=Supervisor(None, n_hosts=1, max_retries=3,
+                                  sleep=lambda s: None),
+        )
+        with dispatch.backend("pallas"), faults.active(plan()):
+            res, st = eng.run([
+                Request(rid=i, prompt=prompts[i], max_new=max_new)
+                for i in range(4)
+            ])
+        return ({r: list(map(int, res[r].tokens)) for r in sorted(res)},
+                dict(KC.launch_counts()), st)
+
+    # discarded warmup: the module-level _decode/_prefill jits persist
+    # across Engine instances, so without it the first measured run would
+    # pay (and count) their compilation and the second would not
+    run_once()
+
+    # disabled mode really is a no-op: one shared span singleton, nothing
+    # buffered
+    assert not telemetry.enabled()
+    assert telemetry.span("a") is telemetry.span("b")
+    tokens_off, launches_off, _ = run_once()
+    assert telemetry.events() == [], "disabled telemetry buffered events"
+
+    with telemetry.enabled_scope():
+        tokens_on, launches_on, st_on = run_once()
+        doc = telemetry.export_doc()
+        snap = telemetry.snapshot()["metrics"]
+
+    # GATE: telemetry-on is observationally invisible — bitwise-identical
+    # tokens and identical per-primitive launch counts
+    assert tokens_on == tokens_off, "telemetry perturbed the tokens"
+    assert launches_on == launches_off, (launches_on, launches_off)
+
+    # GATE: the trace is schema-valid Perfetto JSON with the structure the
+    # tier promises — nested primitive spans under engine phases, launch/
+    # modelled-byte attribution, preemption + fault instants, request
+    # async tracks
+    telemetry.validate_trace(doc)
+    ev = doc["traceEvents"]
+    spans = [e for e in ev if e["ph"] == "X"]
+    names = {e["name"] for e in ev}
+    for need in ("engine.prefill", "engine.decode", "engine.sample",
+                 "engine.retire", "engine.admit", "pool.alloc",
+                 "supervisor.retry"):
+        assert need in names, f"missing span {need!r}"
+    assert "engine.preempt" in names and "fault-injected" in names, names
+    assert any(e["ph"] == "b" and e["name"] == "req" for e in ev)
+    prim_spans = [e for e in spans if e["name"].startswith("ak.")]
+    assert prim_spans, "no primitive spans recorded"
+    attributed = [e for e in spans
+                  if e.get("args", {}).get("launches", 0) > 0
+                  and e.get("args", {}).get("modelled_bytes", 0) > 0]
+    assert attributed, "no span carries launch + modelled-byte attribution"
+
+    # GATE: snapshot() is the same truth the legacy accessors tell —
+    # per-primitive launch totals and registry call counters line up
+    def total(name):
+        fam = snap.get(name, {"samples": []})
+        return sum(s["value"] for s in fam["samples"])
+
+    assert total("ak_pallas_launches_total") == KC.launch_count()
+    reg_calls = sum(s["calls"] for s in registry.stats().values())
+    assert total("ak_registry_calls_total") == reg_calls
+    assert total("ak_supervisor_retries_total") >= st_on.step_retries
+
+    # post-scope: disabled again, and the enable/disable cycle did not
+    # leak spans into the (kept) buffer beyond what the run recorded
+    assert not telemetry.enabled()
+    assert telemetry.span("x") is telemetry.span("y")
+
+    return {
+        "tokens_identical": True,
+        "launches": {k: int(v) for k, v in sorted(launches_on.items())},
+        "trace_spans": len(spans),
+        "primitive_spans": len(prim_spans),
+        "attributed_spans": len(attributed),
+        "instants": sorted({e["name"] for e in ev if e["ph"] == "i"}),
+        "preemptions": int(st_on.preemptions),
+        "step_retries": int(st_on.step_retries),
+        "faults_injected": int(st_on.faults_injected),
+    }
+
+
 def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
         prompt_len: int = 5, max_new: int = 6,
         json_path: str | None = BENCH_JSON):
@@ -358,6 +493,10 @@ def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
         params, cfg, slots=slots, prompt_len=prompt_len,
         max_new=max_new, cache_len=cache_len,
     )
+    obs_entry = _obs_gate(
+        params, cfg, slots=slots, prompt_len=prompt_len,
+        max_new=max_new, cache_len=cache_len,
+    )
 
     tok_s = stats.tokens_per_s
     entry = {
@@ -378,6 +517,7 @@ def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
                              "b": COUNT_B, "v": COUNT_V},
         "paged": paged_entry,
         "chaos": chaos_entry,
+        "obs": obs_entry,
         # informational only — excluded from the skip-if-identical
         # compare. First-trace compile cost is split out of the steady
         # numbers: decode_s/prefill_s are steady state, tok_s is computed
@@ -432,6 +572,16 @@ def run(arch: str = "internlm2_1_8b", *, slots: int = 3, requests: int = 6,
             f"timeout={chaos_entry['timeouts']} "
             f"completed={chaos_entry['completed']} token-identical, "
             f"pool conserved, deterministic replay: PASS",
+        ),
+        (
+            "serve.obs",
+            0.0,
+            f"telemetry on/off tokens identical, launches identical "
+            f"({sum(obs_entry['launches'].values())} total); trace "
+            f"{obs_entry['trace_spans']} spans "
+            f"({obs_entry['primitive_spans']} ak.*, "
+            f"{obs_entry['attributed_spans']} attributed), "
+            f"snapshot==legacy counters: PASS",
         ),
     ]
 

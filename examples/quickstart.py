@@ -15,6 +15,12 @@ undersized pool (DESIGN.md §9): injected failures are absorbed by
 supervised retries and preempt-and-recompute, and the surviving tokens
 still match the contiguous reference bit for bit. ``--deadline`` /
 ``--queue-cap`` add the latency/admission bounds to the same run.
+
+``--trace PATH`` exports the telemetry walkthrough's span buffer as
+Perfetto/Chrome-trace JSON — open it at https://ui.perfetto.dev to see
+nested ``ak.*`` primitive spans carrying launch counts and modelled HBM
+bytes (DESIGN.md §11). Without the flag the walkthrough still runs and
+writes to a temp file.
 """
 import argparse
 
@@ -36,6 +42,9 @@ _ap.add_argument("--deadline", type=int, default=None,
                       "chaos vignette")
 _ap.add_argument("--queue-cap", type=int, default=None,
                  help="bounded admission queue for the chaos vignette")
+_ap.add_argument("--trace", default=None, metavar="PATH",
+                 help="where the telemetry walkthrough writes its "
+                      "Perfetto trace (default: a temp file)")
 _args = _ap.parse_args()
 
 rng = np.random.default_rng(0)
@@ -112,6 +121,28 @@ with ak.tuning.using_cache(cache):
 np.testing.assert_array_equal(np.asarray(s3), np.sort(np.asarray(big)))
 print(f"autotuned sort    : {entry['backend']} {entry['knobs']} "
       f"({entry['speedup']:.1f}x modelled, cache hits={cache.stats.hits})")
+
+# -- telemetry: spans, metrics, and a Perfetto trace ------------------------
+# One global flag gates everything: disabled (the default) costs a single
+# read per call site; enabled, every registry dispatch opens a span that
+# records backend, launch count and modelled HBM bytes (DESIGN.md §11).
+ak.telemetry.enable()
+with ak.telemetry.span("quickstart.walkthrough", cat="example"):
+    ak.merge_sort(x)
+    ak.reduce(jnp.add, x, init=0.0)
+    with ak.backend("pallas"):
+        ak.merge_sort(x)
+ak.telemetry.instant("walkthrough-done", cat="example")
+trace_path = _args.trace or os.path.join(tempfile.mkdtemp(), "trace.json")
+doc = ak.telemetry.export(trace_path)
+ak.telemetry.validate_trace(doc)
+ak.telemetry.disable()
+snap = ak.metrics.snapshot()["metrics"]
+calls = sum(s["value"]
+            for s in snap["ak_registry_calls_total"]["samples"])
+print(f"telemetry         : {len(doc['traceEvents'])} events -> "
+      f"{trace_path} (ui.perfetto.dev); "
+      f"{calls:.0f} registry calls in ak.metrics.snapshot()")
 
 # -- optional: the paged KV cache on the serving path -----------------------
 # AK primitives AS the allocator: accumulate + searchsortedfirst find free

@@ -19,6 +19,11 @@ absorbed by supervised retries and preempt-and-recompute — per-request
 outcomes print as structured statuses. ``--deadline`` (engine steps) and
 ``--queue-cap`` bound latency and admission the same way a production
 front-end would.
+
+``--trace PATH`` records telemetry spans for the whole run and exports
+Perfetto/Chrome-trace JSON (open PATH at https://ui.perfetto.dev);
+``--metrics PATH`` writes the metrics snapshot (.json or Prometheus
+text). DESIGN.md §11 documents the span/metric model.
 """
 import argparse
 
@@ -27,6 +32,7 @@ import jax
 from repro.configs import load_smoke_config
 from repro.launch.serve import serve_loop
 from repro.models import model as M
+from repro.runtime import metrics, telemetry
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--paged", action="store_true",
@@ -44,7 +50,14 @@ ap.add_argument("--queue-cap", type=int, default=None,
 ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                 help="seeded fault injection with supervised retries and "
                      "preemption (same seed, same faults)")
+ap.add_argument("--trace", default=None, metavar="PATH",
+                help="export a Perfetto/Chrome-trace JSON of the run")
+ap.add_argument("--metrics", default=None, metavar="PATH",
+                help="write a metrics snapshot (.json or Prometheus text)")
 args = ap.parse_args()
+
+if args.trace:
+    telemetry.enable()
 
 cfg = load_smoke_config("internlm2_1_8b")
 rng = jax.random.PRNGKey(0)
@@ -73,4 +86,10 @@ if args.chaos is not None or args.deadline or args.queue_cap:
           + f"; injected={es.faults_injected} preempt={es.preemptions} "
             f"retries={es.step_retries} rejected={es.rejections} "
             f"timed_out={es.timeouts}")
+if args.trace:
+    doc = telemetry.export(args.trace)
+    telemetry.disable()
+    print(f"trace  : {len(doc['traceEvents'])} events -> {args.trace}")
+if args.metrics:
+    print(f"metrics: snapshot -> {metrics.write(args.metrics)}")
 print(f"sample of generations (token ids):\n{toks[:2]}")

@@ -10,6 +10,7 @@ Import as a namespace, AK-style::
 from repro.core import registry
 from repro.core.dispatch import backend, default_backend, set_default_backend
 from repro.core.registry import tuning
+from repro.runtime import metrics, telemetry  # noqa: F401  (ak.telemetry)
 from repro.core.ops import (
     accumulate,
     all_pred,
@@ -47,7 +48,7 @@ from repro.core.distributed import (
 
 __all__ = [
     "backend", "default_backend", "set_default_backend",
-    "registry", "tuning",
+    "registry", "tuning", "metrics", "telemetry",
     "accumulate", "all_pred", "any_pred", "foreachindex", "map_elements",
     "mapreduce", "reduce",
     "merge", "merge_kv",

@@ -58,6 +58,24 @@ from repro.kernels import hist_kernel, map_kernel, reduce_kernel, scan_kernel
 from repro.kernels import merge_kernel, nucleus_kernel, search_kernel
 from repro.kernels import page_kernel, segment_kernel, sort_kernel
 from repro.kernels import ref as kref
+from repro.runtime import metrics, telemetry
+
+
+def _modelled_bytes(operands) -> int:
+    """Modelled HBM traffic of one dispatch: 2x the summed operand footprint
+    (stream every array in once, write a result of comparable size) — the
+    trace-annotation lower bound; benchmarks/cost.py holds the calibrated
+    per-kernel models."""
+    total = 0
+    for a in operands:
+        size = getattr(a, "size", 0)
+        dt = getattr(a, "dtype", None)
+        if size and dt is not None:
+            try:
+                total += int(size) * np.dtype(dt).itemsize
+            except TypeError:
+                pass
+    return 2 * total
 
 
 # --------------------------------------------------------------------------
@@ -512,6 +530,23 @@ class Primitive:
             switch_below = tune["switch_below"]
         resolved = self._select_backend(backend, n, switch_below, hint)
 
+        # Telemetry span per dispatch (DESIGN.md §11), annotated with the
+        # modelled HBM streaming bytes — 2x the operand footprint (one read
+        # + one write per array; benchmarks/cost.py owns the precise
+        # per-kernel models). Disabled path: ``span("")`` is the shared
+        # no-op singleton and the bytes are never computed.
+        if telemetry.enabled():
+            cm = telemetry.span("ak." + self.name, cat="primitive",
+                                backend=resolved, n=int(n))
+            mb = _modelled_bytes(operands)
+        else:
+            cm, mb = telemetry.span(""), 0
+        with cm:
+            if mb:
+                telemetry.attribute(modelled_bytes=mb)
+            return self._dispatch(operands, opts, resolved, tune)
+
+    def _dispatch(self, operands, opts, resolved: str, tune: dict):
         # interpret/block geometry only reach Pallas kernels; keying the
         # jnp path on them would compile duplicate identical executables
         # whenever a geometry override is active.
@@ -541,7 +576,7 @@ class Primitive:
             # Unhashable static (tracer init etc.): direct call, no cache.
             with self._cache_lock:
                 self.stats.uncached += 1
-            with KC.tuning_scope(**scope):
+            with KC.launch_attribution(self.name), KC.tuning_scope(**scope):
                 return self._impl(resolved)(*operands, **opts)
 
         key = (resolved, tuple(statics), tune_key)
@@ -559,10 +594,12 @@ class Primitive:
         def traced(*arrays):
             # Runs only when jax (re)traces: an exact trace counter.
             # ``prim.stats`` (not a captured object) so reset_stats() also
-            # covers retraces of already-cached kernels.
+            # covers retraces of already-cached kernels. Launch attribution
+            # lives HERE (not in __call__) because launches happen at trace
+            # time — including retraces of cached kernels on new shapes.
             with lock:
                 prim.stats.traces += 1
-            with KC.tuning_scope(**scope):
+            with KC.launch_attribution(prim.name), KC.tuning_scope(**scope):
                 return impl(*arrays, **frozen_opts)
 
         fn = jax.jit(traced)
@@ -641,6 +678,34 @@ def reset_stats() -> None:
 def clear_caches() -> None:
     for p in _REGISTRY.values():
         p.clear()
+
+
+def _metrics_collector(reg) -> None:
+    """Pull-sync the legacy PrimitiveStats + launch tallies into the
+    process metrics registry at snapshot time (runtime/metrics.py).
+    ``registry.stats()`` and ``KC.launch_count()`` stay the source of
+    truth; ``ak.telemetry.snapshot()`` always agrees with them."""
+    calls = reg.counter("ak_registry_calls_total",
+                        "Primitive.__call__ dispatches")
+    hits = reg.counter("ak_registry_cache_hits_total",
+                       "dispatches served by a cached jitted kernel")
+    traces = reg.counter("ak_registry_traces_total",
+                         "jax (re)traces of registered impls")
+    uncached = reg.counter("ak_registry_uncached_total",
+                           "uncacheable direct calls (unhashable statics)")
+    for name, p in _REGISTRY.items():
+        s = p.stats
+        calls.set_total(s.calls, primitive=name)
+        hits.set_total(s.cache_hits, primitive=name)
+        traces.set_total(s.traces, primitive=name)
+        uncached.set_total(s.uncached, primitive=name)
+    launches = reg.counter("ak_pallas_launches_total",
+                           "trace-time pallas_call launches")
+    for label, n in KC.launch_counts().items():
+        launches.set_total(n, primitive=label)
+
+
+metrics.register_collector(_metrics_collector)
 
 
 # --------------------------------------------------------------------------

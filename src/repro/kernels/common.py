@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.runtime import telemetry
+
 # TPU vector-register geometry (v4/v5): 8 sublanes x 128 lanes.
 SUBLANES = 8
 LANES = 128
@@ -103,7 +105,7 @@ def tuning_scope(*, interpret=None, block_rows=None, block_cols=None,
 
 
 # --------------------------------------------------------------------------
-# Trace-time launch counter — package-wide.
+# Trace-time launch counter — package-wide, thread-safe, attributed.
 #
 # Incremented once per ``pl.pallas_call`` ANY kernel in this package issues,
 # i.e. once per kernel launch of a single execution of the traced program.
@@ -113,25 +115,62 @@ def tuning_scope(*, interpret=None, block_rows=None, block_cols=None,
 # launches per decode step for the fused vs unfused sampler. Kernels issue
 # launches through ``pallas_call`` below; ``sort_kernel`` re-exports the
 # counter so existing callers keep working.
+#
+# Launches are attributed two ways: (a) to the label set by the innermost
+# ``launch_attribution(label)`` scope — the registry opens one per primitive
+# trace, so ``launch_counts()`` breaks the total down per primitive — and
+# (b) to every open telemetry span on the calling thread, so phase spans on
+# the trace carry their aggregate launch count (DESIGN.md §11). The label
+# scope is thread-local; the tallies live under one lock because jax may
+# retrace the same program from several threads.
 # --------------------------------------------------------------------------
 
+_launch_lock = threading.Lock()
 _launches = 0
+_launch_by_label: dict[str, int] = {}
+_launch_label = threading.local()
 
 
 def launch_count() -> int:
     return _launches
 
 
+def launch_counts() -> dict[str, int]:
+    """Per-label launch tallies (label = primitive name from the registry's
+    ``launch_attribution`` scope; bare launches land under ``"unattributed"``).
+    Values sum to ``launch_count()``."""
+    with _launch_lock:
+        return dict(_launch_by_label)
+
+
 def reset_launch_count() -> None:
     global _launches
-    _launches = 0
+    with _launch_lock:
+        _launches = 0
+        _launch_by_label.clear()
+
+
+@contextlib.contextmanager
+def launch_attribution(label: str):
+    """Attribute every ``pallas_call`` traced in this (thread-local) scope
+    to ``label``. Nestable — the innermost label wins."""
+    prev = getattr(_launch_label, "value", None)
+    _launch_label.value = label
+    try:
+        yield
+    finally:
+        _launch_label.value = prev
 
 
 def pallas_call(*args, **kwargs):
     """Counted ``pl.pallas_call`` — every kernel in this package launches
     through here so trace-time launch counting covers the whole suite."""
     global _launches
-    _launches += 1
+    label = getattr(_launch_label, "value", None) or "unattributed"
+    with _launch_lock:
+        _launches += 1
+        _launch_by_label[label] = _launch_by_label.get(label, 0) + 1
+    telemetry.attribute(launches=1)
     return pl.pallas_call(*args, **kwargs)
 
 

@@ -73,6 +73,7 @@ HYPER_ORDER = 3
 # gate counts sampler launches across sort + nucleus kernels); these
 # aliases keep the original read/reset surface.
 launch_count = C.launch_count
+launch_counts = C.launch_counts
 reset_launch_count = C.reset_launch_count
 
 

@@ -80,7 +80,7 @@ from repro.core import registry
 from repro.kernels import common as KC
 from repro.launch.paging import PageExhausted, PagePool
 from repro.models import model as M
-from repro.runtime import faults
+from repro.runtime import faults, metrics, telemetry
 from repro.runtime.supervisor import (
     NodeLossError,
     StragglerMonitor,
@@ -236,6 +236,51 @@ class EngineStats:
     step_retries: int = 0        # supervised device-step retries this run
     faults_injected: int = 0     # injected faults observed this run
     node_loss: str = ""          # non-empty: run degraded on NodeLossError
+    # -- per-request timeline (DESIGN.md §11) ------------------------------
+    # rid -> {submit_t, admit_t, first_token_t, last_token_t, finish_t
+    #         (perf_counter seconds), submit_step, status, tokens}; keys
+    # appear as the request reaches each lifecycle point. queue_depth
+    # samples len(queue)+len(resume_q) once per decode step.
+    timeline: dict = dataclasses.field(default_factory=dict)
+    queue_depth: list = dataclasses.field(default_factory=list)
+
+    # -- derived latency distributions -------------------------------------
+    def _deltas(self, a: str, b: str) -> list:
+        return [tl[b] - tl[a] for tl in self.timeline.values()
+                if a in tl and b in tl]
+
+    @staticmethod
+    def _pcts(vals) -> dict:
+        if not vals:
+            return {}
+        return {"p50": float(np.percentile(vals, 50)),
+                "p99": float(np.percentile(vals, 99)),
+                "mean": float(np.mean(vals)), "n": len(vals)}
+
+    @property
+    def queue_wait_s(self) -> dict:
+        """submit -> admission wait: {} or {p50, p99, mean, n}."""
+        return self._pcts(self._deltas("submit_t", "admit_t"))
+
+    @property
+    def ttft_s(self) -> dict:
+        """submit -> first sampled token (the serving-tier gate metric)."""
+        return self._pcts(self._deltas("submit_t", "first_token_t"))
+
+    @property
+    def tbt_s(self) -> dict:
+        """Mean time between tokens per request (2+ tokens only)."""
+        vals = [
+            (tl["last_token_t"] - tl["first_token_t"]) / (tl["tokens"] - 1)
+            for tl in self.timeline.values()
+            if tl.get("tokens", 0) > 1 and "first_token_t" in tl
+            and "last_token_t" in tl
+        ]
+        return self._pcts(vals)
+
+    @property
+    def mean_queue_depth(self) -> float:
+        return float(np.mean(self.queue_depth)) if self.queue_depth else 0.0
 
     @property
     def tokens_per_s(self) -> float:
@@ -262,6 +307,46 @@ class EngineStats:
     @property
     def prefix_hit_rate(self) -> float:
         return self.prefix_hits / max(self.prefix_lookups, 1)
+
+
+def _publish_run_metrics(stats: EngineStats) -> None:
+    """Fold one finished run's EngineStats into the process metrics
+    registry (runtime/metrics.py): counters accumulate across runs,
+    histograms observe the per-request latency distributions. Push-model
+    (once per run, off the hot path); EngineStats itself stays the
+    per-run accessor."""
+    c = metrics.counter
+    c("ak_engine_steps_total", "decode steps dispatched").inc(stats.steps)
+    c("ak_engine_tokens_total", "tokens emitted (EOS-aware)").inc(
+        stats.tokens)
+    c("ak_engine_prefills_total", "prefill dispatches").inc(stats.prefills)
+    c("ak_engine_preemptions_total",
+      "evictions into the recompute queue").inc(stats.preemptions)
+    c("ak_engine_resumes_total",
+      "replay-prefills of evicted requests").inc(stats.resumes)
+    c("ak_engine_defrags_total", "pool compactions").inc(stats.defrags)
+    c("ak_engine_cow_forks_total", "copy-on-write page forks").inc(
+        stats.cow_forks)
+    if stats.node_loss:
+        c("ak_engine_node_loss_total", "runs degraded on NodeLossError").inc()
+    statuses = [tl.get("status") for tl in stats.timeline.values()]
+    for status in sorted(s for s in statuses if s):
+        c("ak_engine_requests_total",
+          "requests by terminal status").inc(status=status)
+    for name, help_, vals in (
+        ("ak_engine_ttft_seconds", "submit -> first token",
+         stats._deltas("submit_t", "first_token_t")),
+        ("ak_engine_queue_wait_seconds", "submit -> admission",
+         stats._deltas("submit_t", "admit_t")),
+    ):
+        h = metrics.histogram(name, help_)
+        for v in vals:
+            h.observe(v)
+    qd = metrics.histogram("ak_engine_queue_depth",
+                           "queued requests sampled per decode step",
+                           buckets=(0, 1, 2, 4, 8, 16, 32, 64))
+    for d in stats.queue_depth:
+        qd.observe(d)
 
 
 class Engine:
@@ -469,6 +554,15 @@ class Engine:
                 stats.timeouts += 1
             elif status == FAILED:
                 stats.failures += 1
+            tl = stats.timeline.setdefault(rid, {})
+            tl["finish_t"] = time.perf_counter()
+            tl["status"] = status
+            tl["tokens"] = len(results[rid].tokens)
+            if status != COMPLETED:
+                telemetry.instant("engine." + status.lower(), cat="engine",
+                                  severity="warning", rid=rid, step=step_no)
+            if "submit_t" in tl:
+                telemetry.async_end("req", rid, status=status)
 
         def terminal_unadmitted(req, status):
             """Terminal transition for a request that never (re)entered a
@@ -487,6 +581,15 @@ class Engine:
                 stats.timeouts += 1
             elif status == FAILED:
                 stats.failures += 1
+            tl = stats.timeline.setdefault(req.rid, {})
+            tl["finish_t"] = time.perf_counter()
+            tl["status"] = status
+            tl["tokens"] = len(res.tokens)
+            telemetry.instant("engine." + status.lower(), cat="engine",
+                              severity="warning", rid=req.rid,
+                              step=stats.steps)
+            if "submit_t" in tl:
+                telemetry.async_end("req", req.rid, status=status)
 
         def supervised(site, fn, *a):
             """Dispatch a device step through the Supervisor with the
@@ -496,7 +599,9 @@ class Engine:
             def step():
                 faults.check(site)
                 return fn(*a)
-            return self.supervisor.run_step(step_fn=step, host=self.host)
+            with telemetry.span(site, cat="engine", step=stats.steps):
+                return self.supervisor.run_step(step_fn=step,
+                                                host=self.host)
 
         def admit(slot, req, replay=None) -> bool:
             """Prefill ``req`` into ``slot``; with ``replay`` (the tokens
@@ -596,6 +701,8 @@ class Engine:
                 retired[rid] = False
                 results[rid] = RequestResult(rid=rid, tokens=[],
                                              admitted_step=stats.steps)
+                tl = stats.timeline.setdefault(rid, {})
+                tl.setdefault("admit_t", t0)
                 t = int(tok0[0])        # sync — prefill is per-request
                 dt = time.perf_counter() - t0
                 if stats.prefills == 1:
@@ -603,6 +710,9 @@ class Engine:
                 else:
                     stats.prefill_s += dt
                 results[rid].tokens.append(t)
+                now = time.perf_counter()
+                tl.setdefault("first_token_t", now)
+                tl["last_token_t"] = now
                 emitted[rid] = 1
                 stats.tokens += 1
                 if retire_check(rid, t):
@@ -663,7 +773,11 @@ class Engine:
                     if not can_admit(req, replay):
                         return False
                     try:
-                        ok = admit(b, req, replay)
+                        with telemetry.span("engine.admit", cat="engine",
+                                            rid=req.rid,
+                                            resume=replay is not None,
+                                            step=stats.steps):
+                            ok = admit(b, req, replay)
                     except (faults.InjectedFault, PageExhausted):
                         # transient: nothing stayed acquired (admit
                         # unwound); same request retries next pass
@@ -676,12 +790,16 @@ class Engine:
         def bookkeep(toks_host, snapshot, step_no):
             """Record one fetched step; returns freed slot indices."""
             freed = []
+            now = time.perf_counter()
             for b in range(B):
                 rid = snapshot[b]
                 if rid is None or retired.get(rid, True):
                     continue
                 tok = int(toks_host[b])
                 results[rid].tokens.append(tok)
+                tl = stats.timeline.get(rid)
+                if tl is not None:
+                    tl["last_token_t"] = now
                 emitted[rid] += 1
                 stats.tokens += 1
                 if retire_check(rid, tok):
@@ -695,16 +813,18 @@ class Engine:
             gather moves the bytes bit for bit, then host refcounts /
             prefix index / block tables relabel through the inverse."""
             nonlocal caches
-            perm = pool.defrag_order()
-            if np.array_equal(perm, np.arange(self.num_pages)):
-                return
-            caches = _gather_pages_jit(caches, jnp.asarray(perm))
-            inv = pool.apply_perm(perm)
-            backed = bt < self.num_pages
-            bt[backed] = inv[bt[backed]]
-            for rid_h, pgs in held.items():   # the rid->pages references
-                held[rid_h] = [int(inv[p]) for p in pgs]
-            stats.defrags += 1
+            with telemetry.span("engine.defrag", cat="alloc",
+                                step=stats.steps):
+                perm = pool.defrag_order()
+                if np.array_equal(perm, np.arange(self.num_pages)):
+                    return
+                caches = _gather_pages_jit(caches, jnp.asarray(perm))
+                inv = pool.apply_perm(perm)
+                backed = bt < self.num_pages
+                bt[backed] = inv[bt[backed]]
+                for rid_h, pgs in held.items():  # the rid->pages references
+                    held[rid_h] = [int(inv[p]) for p in pgs]
+                stats.defrags += 1
 
         retires_since_defrag = 0
 
@@ -716,23 +836,26 @@ class Engine:
             while len(pending) > keep:
                 t0 = time.perf_counter()
                 toks_dev, snapshot, step_no = pending.popleft()
-                freed = bookkeep(np.asarray(toks_dev), snapshot, step_no)
-                for b in freed:
-                    rid_f = snapshot[b]
-                    slot_rid[b] = None
-                    pos[b] = self.cache_len
-                    if self.paged:
-                        # incremental release: the pages go back the
-                        # moment THIS request retires, not when the slot
-                        # is eventually refilled
-                        for pg in held.pop(rid_f, []):
-                            pool.release(pg)
-                        bt[b] = self.num_pages
-                if self.paged and self.defrag_every and freed:
-                    retires_since_defrag += len(freed)
-                    if retires_since_defrag >= self.defrag_every:
-                        do_defrag()
-                        retires_since_defrag = 0
+                with telemetry.span("engine.retire", cat="engine",
+                                    step=step_no):
+                    freed = bookkeep(np.asarray(toks_dev), snapshot,
+                                     step_no)
+                    for b in freed:
+                        rid_f = snapshot[b]
+                        slot_rid[b] = None
+                        pos[b] = self.cache_len
+                        if self.paged:
+                            # incremental release: the pages go back the
+                            # moment THIS request retires, not when the
+                            # slot is eventually refilled
+                            for pg in held.pop(rid_f, []):
+                                pool.release(pg)
+                            bt[b] = self.num_pages
+                    if self.paged and self.defrag_every and freed:
+                        retires_since_defrag += len(freed)
+                        if retires_since_defrag >= self.defrag_every:
+                            do_defrag()
+                            retires_since_defrag = 0
                 self.monitor.record(0, time.perf_counter() - t0)
                 self.supervisor.beat(self.host)
 
@@ -757,6 +880,10 @@ class Engine:
                 return
             res.preemptions += 1
             stats.preemptions += 1
+            telemetry.instant("engine.preempt", cat="engine",
+                              severity="warning", rid=rid,
+                              step=stats.steps,
+                              tokens_to_replay=len(res.tokens))
             if res.preemptions > self.max_preemptions:
                 finish(rid, PREEMPTED, stats.steps)
             else:
@@ -805,6 +932,14 @@ class Engine:
             while arrivals and arrivals[0].submit_step <= stats.steps:
                 req = arrivals.popleft()
                 req_by_rid[req.rid] = req
+                stats.timeline[req.rid] = {
+                    "submit_t": time.perf_counter(),
+                    "submit_step": stats.steps,
+                }
+                telemetry.async_begin(
+                    "req", req.rid, rid=req.rid,
+                    prompt_len=int(req.prompt.shape[0]),
+                    max_new=req.max_new)
                 queue.append(req)
             if self.queue_cap is not None:
                 while len(queue) > self.queue_cap:
@@ -972,8 +1107,10 @@ class Engine:
                 idxs = np.asarray(
                     [0 if r is None else next_idx[r] for r in slot_rid],
                     np.int32)
-                keys = self._keys(rids, idxs)
-                tok = self._sample(keys, logits[:, 0])
+                with telemetry.span("engine.sample", cat="engine",
+                                    step=step_no):
+                    keys = self._keys(rids, idxs)
+                    tok = self._sample(keys, logits[:, 0])
                 cur_tok = tok[:, None]
                 if first_step:
                     # the first decode step carries the trace+compile
@@ -987,6 +1124,7 @@ class Engine:
                     pos[b] = min(pos[b] + 1, self.cache_len)
                 stats.steps += 1
                 stats.slot_util.append(len(live) / B)
+                stats.queue_depth.append(len(queue) + len(resume_q))
                 if self._token_bytes:
                     # memory economics, sampled per step: logical tokens
                     # live lanes hold vs the cache bytes backing them
@@ -1013,6 +1151,9 @@ class Engine:
             # permanent device-step loss: degrade STRUCTURALLY — every
             # request leaves with a terminal status, every page returns
             # to the pool, and the caller gets results, not a traceback
+            telemetry.instant("engine.node-loss", cat="engine",
+                              severity="error", step=stats.steps,
+                              plan=str(e.plan))
             drain(0)
             for b in range(B):
                 if slot_rid[b] is not None and not retired[slot_rid[b]]:
@@ -1036,4 +1177,5 @@ class Engine:
             time.perf_counter() - t_run - stats.prefill_s
             - stats.compile_prefill_s - stats.compile_decode_s, 1e-9
         )
+        _publish_run_metrics(stats)
         return results, stats

@@ -43,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import core as ak
-from repro.runtime import faults
+from repro.runtime import faults, telemetry
 
 
 class PageExhausted(RuntimeError):
@@ -83,19 +83,20 @@ class PagePool:
         # so an injected PageExhausted exercises the engine's preemption
         # path even when pages are actually free (runtime/faults.py)
         faults.check("pool.alloc")
-        if self.free_count() < count:
-            raise PageExhausted(
-                f"page pool exhausted: wanted {count} pages, "
-                f"{self.free_count()}/{self.num_pages} free"
-            )
-        free = jnp.asarray(self.refcount == 0, jnp.int32)
-        running = ak.accumulate(operator.add, free, init=0)
-        ids = np.asarray(ak.searchsortedfirst(
-            running, jnp.arange(1, count + 1, dtype=running.dtype)
-        ))
-        self.refcount[ids] = 1
-        self.allocs_total += count
-        return [int(i) for i in ids]
+        with telemetry.span("pool.alloc", cat="alloc", count=count):
+            if self.free_count() < count:
+                raise PageExhausted(
+                    f"page pool exhausted: wanted {count} pages, "
+                    f"{self.free_count()}/{self.num_pages} free"
+                )
+            free = jnp.asarray(self.refcount == 0, jnp.int32)
+            running = ak.accumulate(operator.add, free, init=0)
+            ids = np.asarray(ak.searchsortedfirst(
+                running, jnp.arange(1, count + 1, dtype=running.dtype)
+            ))
+            self.refcount[ids] = 1
+            self.allocs_total += count
+            return [int(i) for i in ids]
 
     # -- sharing / copy-on-write ------------------------------------------
     def share(self, pid: int) -> int:
@@ -146,11 +147,12 @@ class PagePool:
     def occupancy(self, max_share: int = 8) -> tuple[float, np.ndarray]:
         """(allocated fraction, refcount histogram). Bin 0 counts free
         pages, bin i pages with i owners, the last bin >= max_share."""
-        hist = np.asarray(ak.bincount(
-            jnp.asarray(np.minimum(self.refcount, max_share), jnp.int32),
-            max_share + 1,
-        ))
-        return 1.0 - float(hist[0]) / self.num_pages, hist
+        with telemetry.span("pool.occupancy", cat="alloc"):
+            hist = np.asarray(ak.bincount(
+                jnp.asarray(np.minimum(self.refcount, max_share), jnp.int32),
+                max_share + 1,
+            ))
+            return 1.0 - float(hist[0]) / self.num_pages, hist
 
     # -- defragmentation (AK: merge_sort_by_key) ---------------------------
     def defrag_order(self) -> np.ndarray:
@@ -159,11 +161,12 @@ class PagePool:
         after. The engine gathers the device pool with it (``pool[perm]``)
         and remaps block tables with the inverse; ``apply_perm`` then
         relabels the host state to match."""
-        ids = jnp.arange(self.num_pages, dtype=jnp.int32)
-        keys = jnp.where(jnp.asarray(self.refcount) > 0, ids,
-                         ids + self.num_pages)
-        _, perm = ak.merge_sort_by_key(keys, ids)
-        return np.asarray(perm)
+        with telemetry.span("pool.defrag_order", cat="alloc"):
+            ids = jnp.arange(self.num_pages, dtype=jnp.int32)
+            keys = jnp.where(jnp.asarray(self.refcount) > 0, ids,
+                             ids + self.num_pages)
+            _, perm = ak.merge_sort_by_key(keys, ids)
+            return np.asarray(perm)
 
     def apply_perm(self, perm: np.ndarray) -> np.ndarray:
         """Relabel host state after the device gather; returns the inverse

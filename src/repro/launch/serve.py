@@ -305,7 +305,28 @@ def main(argv=None):
                          ": injected allocator/admission/device-step "
                          "failures, absorbed by supervised retries and "
                          "preemption; same seed, same faults")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record telemetry spans and export a Perfetto/"
+                         "Chrome-trace JSON to PATH at exit (open it at "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write a metrics snapshot to PATH at exit "
+                         "(.json: JSON snapshot; else Prometheus text)")
     args = ap.parse_args(argv)
+
+    from repro.runtime import metrics, telemetry
+    if args.trace:
+        telemetry.enable()
+
+    def export_obs():
+        if args.trace:
+            doc = telemetry.export(args.trace)
+            telemetry.disable()
+            print(f"trace: {len(doc['traceEvents'])} events -> "
+                  f"{args.trace}")
+        if args.metrics:
+            metrics.write(args.metrics)
+            print(f"metrics: snapshot -> {args.metrics}")
 
     cfg = load_smoke_config(args.arch)
     rng = jax.random.PRNGKey(0)
@@ -355,6 +376,14 @@ def main(argv=None):
             f"decode {stats.tokens_per_s:.1f} tok/s; "
             f"slot util {stats.mean_slot_util:.2f}"
         )
+        tt, qw = stats.ttft_s, stats.queue_wait_s
+        if tt:
+            print(
+                f"latency: ttft p50 {tt['p50'] * 1e3:.1f}ms "
+                f"p99 {tt['p99'] * 1e3:.1f}ms; "
+                f"queue-wait p50 {qw.get('p50', 0.0) * 1e3:.1f}ms; "
+                f"mean queue depth {stats.mean_queue_depth:.2f}"
+            )
         if args.paged:
             print(
                 f"paged: {stats.num_pages} pages x {stats.page_size} tokens; "
@@ -376,6 +405,7 @@ def main(argv=None):
                 f"resumes={stats.resumes} retries={stats.step_retries} "
                 f"rejections={stats.rejections} timeouts={stats.timeouts}"
             )
+        export_obs()
         return
 
     # encdec/vlm: fixed-batch fallback
@@ -395,6 +425,7 @@ def main(argv=None):
     )
     print(f"generated {toks.shape} tokens; prefill {stats.prefill_s:.3f}s; "
           f"decode {stats.tokens_per_s:.1f} tok/s")
+    export_obs()
 
 
 if __name__ == "__main__":

@@ -1,4 +1,6 @@
 from repro.runtime import faults  # noqa: F401
+from repro.runtime import metrics  # noqa: F401
+from repro.runtime import telemetry  # noqa: F401
 from repro.runtime.supervisor import (  # noqa: F401
     ElasticPlan,
     NodeLossError,

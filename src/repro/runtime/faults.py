@@ -38,6 +38,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.runtime import metrics, telemetry
+
 #: Every instrumented site, in dependency order. ``FaultPlan.seeded``
 #: schedules over these by default.
 SITES = ("pool.alloc", "engine.admit", "engine.prefill", "engine.decode")
@@ -133,6 +135,13 @@ class FaultPlan:
         fault = self.schedule.get((site, idx))
         if fault is not None:
             self.fired.append((site, idx))
+            # Push-counted (not a collector): firings must survive the
+            # plan being uninstalled after the chaos block ends.
+            metrics.counter(
+                "ak_faults_injected_total", "scheduled faults that fired"
+            ).inc(site=site)
+            telemetry.instant("fault-injected", cat="fault",
+                              severity="warning", site=site, index=idx)
             raise fault.build()
 
 
@@ -167,3 +176,20 @@ def check(site: str) -> None:
     for this call. No-op when no plan is installed."""
     if _active is not None:
         _active.fire(site)
+
+
+def _metrics_collector(reg) -> None:
+    """Pull-sync the ACTIVE plan's per-site call counters — they belong to
+    the plan (see FaultPlan docstring), so they only exist while one is
+    installed; cumulative firings are push-counted in ``fire`` above."""
+    if _active is None:
+        return
+    calls = reg.counter("ak_fault_site_calls_total",
+                        "instrumented-site calls under the active plan")
+    for site, n in _active.counters.items():
+        calls.set_total(n, site=site)
+    reg.gauge("ak_fault_plan_pending",
+              "scheduled faults not yet reached").set(_active.pending)
+
+
+metrics.register_collector(_metrics_collector)

@@ -32,9 +32,12 @@ The clock is injectable so all of this is testable on one CPU.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable
+
+from repro.runtime import metrics, telemetry
 
 
 class NodeLossError(RuntimeError):
@@ -80,6 +83,7 @@ class StragglerMonitor:
         self.alpha = alpha
         self.threshold = threshold
         self.ema = [None] * n_hosts
+        self._flagged: set[int] = set()
 
     def record(self, host: int, step_time: float):
         prev = self.ema[host]
@@ -87,6 +91,24 @@ class StragglerMonitor:
             step_time if prev is None
             else (1 - self.alpha) * prev + self.alpha * step_time
         )
+        # Publish the EWMA (it used to be invisible outside this object)
+        # and emit a warning event the moment a host crosses the straggler
+        # threshold — not on every step it stays flagged.
+        metrics.gauge(
+            "ak_straggler_ewma_seconds",
+            "per-host EWMA step time from the straggler monitor",
+        ).set(self.ema[host], host=str(host))
+        flagged = set(self.stragglers())
+        for h in sorted(flagged - self._flagged):
+            metrics.counter(
+                "ak_straggler_flags_total",
+                "hosts newly flagged slower than threshold x median",
+            ).inc(host=str(h))
+            telemetry.instant(
+                "straggler-flagged", cat="supervisor", severity="warning",
+                host=h, ewma_s=round(self.ema[h], 6),
+            )
+        self._flagged = flagged
 
     def stragglers(self):
         vals = [e for e in self.ema if e is not None]
@@ -189,18 +211,51 @@ class Supervisor:
         err = None
         delay = self.backoff_base
         for attempt in range(self.max_retries + 1):
-            if attempt > 0:
-                self.sleep(delay)
-                delay = min(delay * 2.0, self.backoff_cap)
-            try:
-                out = fn(*args, **kwargs)
-                self.beat(host)
-                return out
-            except Exception as e:  # noqa: BLE001 — anything transient
-                err = e
-                self.retries_total += 1
-                self._retry_times.append(self.clock())
-                if self._window_exhausted():
-                    break
+            # Retries become child spans of whatever phase span is open
+            # (engine.decode etc.), carrying the backoff they paid; the
+            # first attempt is the phase itself, not a retry.
+            retry_cm = (
+                telemetry.span("supervisor.retry", cat="supervisor",
+                               host=host, attempt=attempt,
+                               backoff_s=round(delay, 6))
+                if attempt > 0 else contextlib.nullcontext()
+            )
+            with retry_cm:
+                if attempt > 0:
+                    self.sleep(delay)
+                    delay = min(delay * 2.0, self.backoff_cap)
+                try:
+                    out = fn(*args, **kwargs)
+                    self.beat(host)
+                    return out
+                except Exception as e:  # noqa: BLE001 — anything transient
+                    err = e
+                    self.retries_total += 1
+                    self._retry_times.append(self.clock())
+                    metrics.counter(
+                        "ak_supervisor_retries_total",
+                        "supervised-step failures that scheduled a retry",
+                    ).inc(host=str(host))
+                    telemetry.instant(
+                        "supervisor.step-failure", cat="supervisor",
+                        severity="warning", host=host, attempt=attempt,
+                        error=type(e).__name__,
+                    )
+                    if self._window_exhausted():
+                        metrics.counter(
+                            "ak_supervisor_escalations_total",
+                            "retry-budget exhaustions (flapping step "
+                            "escalated to the permanent-loss path)",
+                        ).inc(host=str(host))
+                        telemetry.instant(
+                            "supervisor.retry-budget-escalation",
+                            cat="supervisor", severity="warning", host=host,
+                        )
+                        break
+        metrics.counter(
+            "ak_supervisor_node_loss_total", "NodeLossError escalations"
+        ).inc(host=str(host))
+        telemetry.instant("supervisor.node-loss", cat="supervisor",
+                          severity="error", host=host)
         dead = max(len(self.dead_hosts()), 1)
         raise NodeLossError(self.elastic_plan(dead)) from err

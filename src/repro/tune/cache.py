@@ -48,6 +48,7 @@ import threading
 import jax
 
 from repro.kernels import common as KC
+from repro.runtime import metrics
 
 SCHEMA_VERSION = 1
 
@@ -251,3 +252,26 @@ class TuneCache:
 
     def __len__(self) -> int:
         return len(self.entries)
+
+
+def _metrics_collector(reg) -> None:
+    """Pull-sync the ATTACHED cache's CacheStats into the process metrics
+    registry (runtime/metrics.py). ``cache.stats`` stays the accessor the
+    tune tests read; the lazy import avoids cache->registry at module
+    import (the registry is what attaches caches in the first place)."""
+    from repro.core.registry import tuning
+    cache = tuning.autotune
+    if cache is None or not isinstance(getattr(cache, "stats", None),
+                                       CacheStats):
+        return
+    s = cache.stats
+    lk = reg.counter("ak_tune_cache_lookups_total",
+                     "autotune-cache lookups on the attached cache")
+    lk.set_total(s.hits, result="hit")
+    lk.set_total(s.misses, result="miss")
+    lk.set_total(s.stale, result="stale")
+    reg.gauge("ak_tune_cache_entries",
+              "entries held by the attached cache").set(len(cache.entries))
+
+
+metrics.register_collector(_metrics_collector)
