@@ -351,6 +351,59 @@ def moe_dispatch_table(json_path=None):
     return "\n".join(lines)
 
 
+def hetero_table(json_path=None):
+    """Heterogeneous co-sort trajectory (the ``sort_hetero`` entries of
+    BENCH_sort.json, DESIGN.md §12): per-rank backend, partition weight and
+    received rows side by side with the modelled uniform-vs-proportional
+    makespan — the visible record that the splitters actually cut
+    throughput-proportionally and that it paid. Missing/invalid files
+    degrade to a hint line, never an error."""
+    path = json_path or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_sort.json",
+    )
+    if not os.path.exists(path):
+        return (f"(no sort trajectory at {path}; populate with "
+                f"`PYTHONPATH=src:. python -m benchmarks.sort_throughput`)")
+    lines = [
+        "| n (P) | rank: backend weight -> rows | overflow | makespan "
+        "uniform vs proportional | gain | weight source |",
+        "|---|---|---|---|---|---|",
+    ]
+    try:
+        with open(path) as f:
+            entries = [e for e in json.load(f)["entries"]
+                       if e.get("entry") == "sort_hetero"]
+        if not entries:
+            return ("(no sort_hetero entries yet; populate with "
+                    "`PYTHONPATH=src:. python -m benchmarks.run --quick`)")
+        for e in entries:
+            ranks = " ".join(
+                f"r{i}:{b[:3]} {w:.3f}->{c}"
+                for i, (b, w, c) in enumerate(zip(
+                    e.get("backends") or [],
+                    e.get("weights") or [],
+                    e.get("received_rows") or [],
+                ))
+            )
+            uni = e.get("modelled_makespan_s_uniform")
+            prop = e.get("modelled_makespan_s_proportional")
+            span = (
+                f"{uni * 1e6:.1f}us vs {prop * 1e6:.1f}us"
+                if uni is not None and prop is not None else "-"
+            )
+            src = sorted(set(e.get("weight_sources") or [])) or ["-"]
+            lines.append(
+                f"| {e.get('n')} ({e.get('nranks')}) | {ranks} | "
+                f"{e.get('overflow')} | {span} | "
+                f"{e.get('makespan_gain'):.2f}x | {'/'.join(src)} |"
+            )
+    except (OSError, json.JSONDecodeError, KeyError, TypeError,
+            AttributeError) as e:
+        return f"(sort trajectory at {path} unreadable: {e})"
+    return "\n".join(lines)
+
+
 def tuned_vs_default_table(cache_path=None):
     """Per-primitive modelled speedup of the autotuned knobs over the
     default resolution, read from the repro.tune cache — makes the perf
@@ -404,6 +457,10 @@ def main():
     ap.add_argument("--moe-json", default=None,
                     help="MoE dispatch trajectory JSON (default: the "
                          "repo's BENCH_moe.json)")
+    ap.add_argument("--sort-json", default=None,
+                    help="sort trajectory JSON with the sort_hetero "
+                         "co-sort entries (default: the repo's "
+                         "BENCH_sort.json)")
     ap.add_argument("--out", default="results/report.md")
     args = ap.parse_args()
 
@@ -425,6 +482,8 @@ def main():
               obs_table(args.serve_json)]
     parts += ["\n\n## MoE dispatch (bucketed vs capacity-padded)\n",
               moe_dispatch_table(args.moe_json)]
+    parts += ["\n\n## Heterogeneous co-sort (mixed-backend mesh)\n",
+              hetero_table(args.sort_json)]
     parts += ["\n\n## Tuned vs default (autotune cache)\n",
               tuned_vs_default_table(args.autotune_cache)]
     text = "".join(parts)

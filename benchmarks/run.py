@@ -209,6 +209,11 @@ def main(argv=None) -> None:
         # distributed gates are trace-only (counted collectives/launches,
         # no execution), so the full n=2^20, P=8 geometry stays cheap
         _emit(sort_throughput.run_distributed(json_path=None))
+        # heterogeneous co-sort gate: skewed jnp/pallas mesh, proportional
+        # vs uniform makespan + bitwise equality; appends the sort_hetero
+        # BENCH_sort.json entry (skipped when identical to the last one —
+        # weights, counts and collectives are all deterministic)
+        _emit(sort_throughput.run_hetero())
         # autotune smoke: deterministic model measure, appends the
         # BENCH_autotune.json trajectory entry
         _emit(autotune_rows())
@@ -228,6 +233,7 @@ def main(argv=None) -> None:
     _emit(dispatch_overhead.run())
     _emit(sort_throughput.run())
     _emit(sort_throughput.run_distributed())
+    _emit(sort_throughput.run_hetero())
     _emit(serving.run())
     _emit(moe_dispatch.run())
     _emit(scaling.run("weak", n_per_rank=32_768, devcounts=(1, 2, 4, 8)))

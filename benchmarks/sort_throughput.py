@@ -343,6 +343,179 @@ def run_distributed(n: int = 2**20, nranks: int = 8,
     return rows
 
 
+# Child for the heterogeneous co-sort gate: a deliberately skewed mesh —
+# forced jnp ranks beside pallas ranks on the fake 8-device host platform —
+# actually EXECUTES the co-sort (bitwise equality and received-row counts
+# cannot be traced), so n stays modest; the partition weights are resolved
+# at the production anchor size where the modelled jnp/pallas skew is real.
+_HETERO_CHILD = """
+import json, sys
+import numpy as np
+import jax, jax.numpy as jnp
+from repro import core as ak
+from repro.launch import mesh as LM
+
+backends = tuple(sys.argv[1].split(","))
+n, n_model, cf = int(sys.argv[2]), int(sys.argv[3]), float(sys.argv[4])
+nranks = len(backends)
+
+# throughput-proportional weights from the scheduler's own resolution
+# path: no cache attached here, so every rank falls back to the
+# deterministic model (sources == "model" on every machine)
+weights, sources = LM.hetero_rank_weights(backends, n_model)
+
+rng = np.random.default_rng(0)
+x_host = rng.lognormal(0.0, 2.0, size=n).astype(np.float32)
+x = jnp.asarray(x_host)
+
+hm = LM.make_hetero_mesh(backends)
+res = LM.co_sort(x, hm, weights=weights, capacity_factor=cf)
+out = np.asarray(ak.collect_sorted(res))
+ref_single = np.asarray(ak.merge_sort(x))  # single-rank reference sort
+
+counts = np.asarray(res.count).reshape(-1)
+caps = ak.exchange_capacities(n // nranks, nranks, cf, weights=weights)
+ak.assert_no_overflow(res, weights=weights)
+
+def traced(xl):
+    return ak.sihsort_sharded(xl, hm.mesh, hm.axis_name,
+                              rank_backends=backends, rank_weights=weights,
+                              capacity_factor=cf)
+
+print(json.dumps({
+    "weights": [float(w) for w in weights],
+    "sources": list(sources),
+    "counts": [int(c) for c in counts],
+    "caps": [int(c) for c in caps],
+    "overflow": int(np.asarray(res.overflow).sum()),
+    "equal_single_rank": bool(np.array_equal(out, ref_single)),
+    "equal_npsort": bool(np.array_equal(out, np.sort(x_host))),
+    "collectives": ak.count_collectives(
+        traced, jax.ShapeDtypeStruct((n,), jnp.float32)),
+}))
+"""
+
+
+def run_hetero(n: int = 2**16, n_model: int = 2**20,
+               backends: tuple = ("jnp", "jnp") + ("pallas",) * 6,
+               capacity_factor: float = 2.0,
+               json_path: str | None = BENCH_JSON):
+    """Heterogeneous co-sort gate — uniform vs throughput-proportional
+    partitioning on a deliberately skewed mesh (jnp ranks beside pallas
+    ranks, simulated on the fake multi-device host platform).
+
+    The child EXECUTES the co-sort with model-resolved weights; asserted
+    here (and re-run by the CI ``hetero-smoke`` job):
+
+      * sorted output bitwise equal to the single-rank reference sort
+        (and np.sort);
+      * per-rank received-row counts within 10% of the throughput-weighted
+        targets ``n * w_r`` — the splitters actually cut proportionally;
+      * zero overflow under the ragged per-destination capacities, and the
+        counts conserve every input row;
+      * still exactly ONE all_to_all (weights add no collective when
+        static);
+      * modelled makespan (``benchmarks/cost.py``, per-rank bandwidths at
+        the production anchor ``n_model``) of the proportional cut ≥1.3×
+        lower than the uniform cut.
+    """
+    nranks = len(backends)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={nranks}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _HETERO_CHILD, ",".join(backends),
+         str(n), str(n_model), str(capacity_factor)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"hetero child failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    weights = np.asarray(rec["weights"])
+    counts = np.asarray(rec["counts"])
+    # THE GATES: correctness first
+    assert rec["equal_single_rank"], "co-sort != single-rank reference"
+    assert rec["equal_npsort"], "co-sort != np.sort"
+    assert rec["overflow"] == 0, rec
+    assert counts.sum() == n, (counts.sum(), n)
+    targets = n * weights
+    assert (np.abs(counts - targets) <= 0.10 * targets).all(), (
+        f"received rows {counts} not within 10% of targets {targets}"
+    )
+    assert rec["collectives"].get("all_to_all") == 1, rec["collectives"]
+    # the weights must actually be skewed (the mesh is mixed on purpose)
+    assert weights.max() / weights.min() > 1.5, weights
+
+    from benchmarks import cost
+
+    n_bytes = n_model * 4  # per-rank f32 shard at the production anchor
+    uniform, prop, gain = cost.hetero_partition_gain(
+        n_bytes, backends, weights=weights
+    )
+    # THE GATE: proportional cuts must beat uniform by >=1.3x makespan
+    assert gain >= 1.3, (
+        f"proportional partitioning gained only {gain:.2f}x over uniform"
+    )
+
+    rows = [
+        (
+            f"sort_throughput.hetero.n{n}.p{nranks}",
+            prop["t_total_s"] * 1e6,
+            f"backends={'/'.join(backends)} "
+            f"weights={np.round(weights, 3).tolist()} "
+            f"makespan uniform={uniform['t_total_s'] * 1e6:.1f}us "
+            f"proportional={prop['t_total_s'] * 1e6:.1f}us "
+            f"gain={gain:.2f}x",
+        ),
+        (
+            "sort_throughput.hetero.gate",
+            0.0,
+            f"bitwise==single-rank: PASS; rows within 10% of weighted "
+            f"targets: PASS; overflow=0: PASS; 1 all_to_all: PASS; "
+            f"makespan gain {gain:.2f}x >= 1.3x: PASS",
+        ),
+    ]
+    if json_path:
+        entry = {
+            "entry": "sort_hetero",
+            "n": n,
+            "n_model": n_model,
+            "nranks": nranks,
+            "backends": list(backends),
+            "capacity_factor": capacity_factor,
+            "weights": rec["weights"],
+            "weight_sources": rec["sources"],
+            "received_rows": rec["counts"],
+            "caps": rec["caps"],
+            "overflow": rec["overflow"],
+            "equal_single_rank": rec["equal_single_rank"],
+            "collectives": rec["collectives"],
+            "modelled_makespan_s_uniform": uniform["t_total_s"],
+            "modelled_makespan_s_proportional": prop["t_total_s"],
+            "makespan_gain": gain,
+            "backend": jax.default_backend(),
+        }
+        # fully deterministic (model weights, counted collectives, seeded
+        # keys): an entry identical to the last recorded one adds no
+        # trajectory information — skip it, same idiom as autotune_rows
+        last = None
+        if os.path.exists(json_path):
+            try:
+                with open(json_path) as f:
+                    prev = [e for e in json.load(f)["entries"]
+                            if e.get("entry") == "sort_hetero"]
+                last = prev[-1] if prev else None
+            except (json.JSONDecodeError, OSError, KeyError, TypeError,
+                    IndexError):
+                last = None
+        if entry != last:
+            append_json(json_path, entry)
+    return rows
+
+
 def append_json(path: str, entry: dict) -> None:
     """Append one entry to a ``{"schema": 1, "entries": [...]}`` trajectory
     file (shared by BENCH_sort.json and BENCH_autotune.json — one idiom,
@@ -361,5 +534,5 @@ def append_json(path: str, entry: dict) -> None:
 
 
 if __name__ == "__main__":
-    for name, us, derived in run() + run_distributed():
+    for name, us, derived in run() + run_distributed() + run_hetero():
         print(f"{name},{us:.1f},{derived}")

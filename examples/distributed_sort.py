@@ -8,6 +8,13 @@ interconnect-cost breakdown — direct vs host-staged transfer, mirroring
 the paper's 4.93× GPUDirect economics.
 
     PYTHONPATH=src python examples/distributed_sort.py
+    PYTHONPATH=src python examples/distributed_sort.py --hetero
+
+``--hetero`` appends the heterogeneous co-processing demo (DESIGN.md
+§12): two jnp-on-CPU ranks beside six Pallas ranks in ONE collective
+mesh, splitters cut throughput-proportionally so the slow ranks receive
+fewer keys — makespan follows the fastest partition, not the slowest
+rank.
 """
 import os
 import subprocess
@@ -17,7 +24,10 @@ if "XLA_FLAGS" not in os.environ:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     raise SystemExit(
-        subprocess.call([sys.executable, os.path.abspath(__file__)], env=env)
+        subprocess.call(
+            [sys.executable, os.path.abspath(__file__)] + sys.argv[1:],
+            env=env,
+        )
     )
 
 # benchmarks/ (the cost model) lives at the repo root, next to examples/
@@ -107,3 +117,37 @@ print(f"  direct vs staged: {speedup:.2f}x "
       f"(paper: 4.93x with GPUDirect — interconnect decides viability)")
 print(f"  ring-on-host overlap hides "
       f"{ring['overlap_saved_s'] * 1e6:.1f}us of wire time per call")
+
+# -- heterogeneous co-processing (DESIGN.md §12) ---------------------------
+# jnp-on-CPU ranks working BESIDE Pallas ranks on one problem: the mesh
+# stays an ordinary 1-D jax mesh, the per-rank backend assignment lowers
+# to lax.switch on axis_index, and the splitters are cut in proportion to
+# each rank's throughput (autotune cache when compatible, cost model
+# otherwise) so the slow ranks stop gating the makespan.
+if "--hetero" in sys.argv[1:]:
+    from repro.launch import mesh as LM  # noqa: E402
+
+    backends = ("jnp", "jnp") + ("pallas",) * 6
+    hm = LM.make_hetero_mesh(backends)
+    # weights anchored at the production shard size the weights describe;
+    # the demo sorts a smaller array so interpret-mode stays snappy
+    w, srcs = LM.hetero_rank_weights(backends, 2**20)
+    nh = 2**16
+    xh = jnp.asarray(rng.lognormal(0, 2, size=nh).astype(np.float32))
+    res = LM.co_sort(xh, hm, weights=w, capacity_factor=2.0)
+    ak.assert_no_overflow(res, weights=w)
+    out = np.asarray(ak.collect_sorted(res))
+    assert np.array_equal(out, np.sort(np.asarray(xh)))
+    counts = np.asarray(res.count).reshape(-1)
+    print("\nheterogeneous co-sort (2 jnp + 6 pallas ranks):")
+    for r, (b, wr, c) in enumerate(zip(backends, w, counts)):
+        bar = "#" * max(int(60 * c / counts.max()), 1)
+        print(f"  rank {r}  {b:6s} w={wr:.3f} ({srcs[r][:5]})  "
+              f"recv {c:6d}  {bar}")
+    print(f"  sorted ✓ bitwise == np.sort; overflow "
+          f"{int(np.asarray(res.overflow).sum())}")
+    uni, prop, gain = cost.hetero_partition_gain(2**20 * 4, backends,
+                                                 weights=w)
+    print(f"  modelled makespan: uniform {uni['t_total_s'] * 1e6:.0f}us "
+          f"-> proportional {prop['t_total_s'] * 1e6:.0f}us "
+          f"({gain:.2f}x)")

@@ -21,6 +21,11 @@ Perfetto/Chrome-trace JSON — open it at https://ui.perfetto.dev to see
 nested ``ak.*`` primitive spans carrying launch counts and modelled HBM
 bytes (DESIGN.md §11). Without the flag the walkthrough still runs and
 writes to a temp file.
+
+``--co-sort`` appends the heterogeneous co-processing vignette
+(DESIGN.md §12): jnp-on-CPU ranks beside Pallas ranks co-sorting ONE
+array on a mixed-backend mesh, splitters cut throughput-proportionally.
+Runs ``examples/distributed_sort.py --hetero`` on 8 fake host devices.
 """
 import argparse
 
@@ -45,6 +50,9 @@ _ap.add_argument("--queue-cap", type=int, default=None,
 _ap.add_argument("--trace", default=None, metavar="PATH",
                  help="where the telemetry walkthrough writes its "
                       "Perfetto trace (default: a temp file)")
+_ap.add_argument("--co-sort", dest="co_sort", action="store_true",
+                 help="also run the heterogeneous co-sort vignette "
+                      "(mixed jnp/pallas mesh, 8 fake devices)")
 _args = _ap.parse_args()
 
 rng = np.random.default_rng(0)
@@ -208,3 +216,18 @@ if _args.paged:
               f"faults={plan.injected} preempt={cst.preemptions} "
               f"retries={cst.step_retries} "
               f"statuses={sorted(res[r].status for r in res)}")
+
+# -- optional: heterogeneous co-sort (DESIGN.md §12) ------------------------
+# Mixed-backend co-processing needs a multi-rank mesh, so this vignette
+# hands off to the distributed demo, which self-relaunches with 8 fake
+# host devices and runs two jnp ranks beside six Pallas ranks.
+if _args.co_sort:
+    import subprocess
+    import sys
+
+    demo = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "distributed_sort.py")
+    print("\nco-sort vignette  : examples/distributed_sort.py --hetero")
+    rc = subprocess.call([sys.executable, demo, "--hetero"])
+    if rc != 0:
+        raise SystemExit(rc)

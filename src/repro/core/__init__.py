@@ -40,8 +40,10 @@ from repro.core.histogram import bincount, minmax_histogram
 from repro.core.paging import page_gather
 from repro.core.distributed import (
     ShardedSort,
+    assert_no_overflow,
     collect_sorted,
     count_collectives,
+    exchange_capacities,
     sihsort,
     sihsort_sharded,
 )
@@ -59,6 +61,7 @@ __all__ = [
     "searchsortedfirst", "searchsortedlast",
     "bincount", "minmax_histogram",
     "page_gather",
-    "ShardedSort", "collect_sorted", "count_collectives", "sihsort",
+    "ShardedSort", "assert_no_overflow", "collect_sorted",
+    "count_collectives", "exchange_capacities", "sihsort",
     "sihsort_sharded",
 ]

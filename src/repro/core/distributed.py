@@ -43,9 +43,21 @@ Algorithm per rank (all inside one traced program):
      capacity buffer.
 
 Outputs are padded-ragged: (sorted values (nranks*cap,), valid count).
-Elements above capacity are dropped and counted in ``overflow`` (exact mode:
+Elements above capacity are dropped and counted in ``overflow`` (per
+destination in ``overflow_by_dest``; exact mode:
 ``capacity_factor=float(nranks)`` makes cap = n_local, which provably never
 overflows — the accounting is skipped outright).
+
+Heterogeneous co-processing (DESIGN.md §12): ``rank_backends`` assigns each
+rank its OWN AK backend (jnp-on-CPU ranks beside Pallas ranks — shard_map
+traces one program, so the rank-local sort and merge finish lower to a
+``lax.switch`` on ``axis_index`` with one branch per distinct backend), and
+``rank_weights`` replaces the uniform splitter targets with
+throughput-proportional ones: rank r receives the fraction w_r/Σw of the
+global keys, and the exchange capacity becomes a per-destination vector cut
+by the same weights. Weights come from the autotune cache via
+``launch.mesh.hetero_rank_weights`` (model-based fallback when no
+measurement exists).
 """
 from __future__ import annotations
 
@@ -53,6 +65,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import compat
 from repro.core import histogram as H
@@ -60,6 +73,7 @@ from repro.core import registry
 from repro.core import search as S
 from repro.core import sort as SRT
 from repro.kernels import common as KC
+from repro.runtime import telemetry
 
 # Default registry tuning for the rank-local sort (step 1) and merge
 # finish (step 6). Shards at serve scale are tens of Ki elements — worth
@@ -95,6 +109,56 @@ def exchange_capacity(n_local: int, nranks: int, capacity_factor: float,
     if any(jnp.dtype(dt).itemsize == 2 for dt in dtypes):
         cap += cap % 2
     return cap
+
+
+def exchange_capacities(n_local: int, nranks: int, capacity_factor: float,
+                        *, weights=None, dtypes=()) -> np.ndarray:
+    """Per-destination slot-count VECTOR of the fused exchange — the ragged
+    generalisation of :func:`exchange_capacity` for throughput-proportional
+    splits: destination r gets ``ceil(n_local * capacity_factor * w_r/Σw)``
+    slots, so total send-buffer budget stays ~``n_local * capacity_factor``
+    however skewed the weights. ``weights=None`` reproduces the uniform
+    scalar rule exactly. Exact mode (``capacity_factor == nranks``) pins
+    every destination at ``n_local`` regardless of weights — the provably-
+    no-overflow cap. Even-rounding for 16-bit operands as in the scalar
+    rule (two lanes per int32 carrier word)."""
+    if weights is None:
+        caps = np.full(
+            nranks,
+            exchange_capacity(n_local, nranks, capacity_factor, dtypes),
+            dtype=np.int64,
+        )
+        return caps
+    w = np.asarray(weights, dtype=float).reshape(-1)
+    if w.shape[0] != nranks:
+        raise ValueError(
+            f"weights has {w.shape[0]} entries for {nranks} ranks"
+        )
+    if not np.all(np.isfinite(w)) or np.any(w <= 0):
+        raise ValueError(f"rank weights must be positive finite, got {w!r}")
+    if float(capacity_factor) == float(nranks):
+        caps = np.full(nranks, max(int(n_local), 1), dtype=np.int64)
+    else:
+        frac = w / w.sum()
+        caps = np.maximum(
+            np.ceil(n_local * float(capacity_factor) * frac
+                    - 1e-9).astype(np.int64),
+            1,
+        )
+    if any(jnp.dtype(dt).itemsize == 2 for dt in dtypes):
+        caps = caps + caps % 2
+    return caps
+
+
+def capacity_plan(counts, caps):
+    """Pure overflow accounting of the capacity-padded exchange: per
+    destination, ``sent = min(count, cap)`` and the remainder is DROPPED —
+    never silently: conservation ``Σsent + Σoverflow == Σcounts`` holds by
+    construction and the lognormal property test in tests/test_hetero.py
+    pins it for ragged caps. Returns ``(sent, overflow_by_dest)``; works on
+    host numpy and traced arrays alike."""
+    sent = jnp.minimum(counts, caps)
+    return sent, counts - sent
 
 
 def _words_per_row(dtype, m: int) -> int:
@@ -155,19 +219,67 @@ class ShardedSort(NamedTuple):
     payload: jax.Array | None  # same layout, or None
     count: jax.Array    # () int32 — valid prefix length
     overflow: jax.Array  # () int32 — elements dropped by capacity limit
+    #: (nranks,) int32 — this source rank's dropped rows per DESTINATION
+    #: (which receiver's capacity bin overflowed); assert_no_overflow names
+    #: the offending rank and weight from it
+    overflow_by_dest: jax.Array | None = None
 
 
-def _interpolated_splitters(hist, lo, hi, nbins, nranks):
+def assert_no_overflow(result: ShardedSort, *, weights=None) -> None:
+    """Host-side guard: raise if the capacity plan dropped rows, naming the
+    offending DESTINATION rank and its partition weight — 'raise
+    capacity_factor' is only actionable when you know which receiver's bin
+    was too small. Works on a single-rank :func:`sihsort` result and on the
+    sharded result (where ``overflow_by_dest`` is the (P, P) source×dest
+    matrix flattened by shard_map)."""
+    total = int(np.asarray(result.overflow).sum())
+    if total == 0:
+        return
+    detail = ""
+    if result.overflow_by_dest is not None:
+        m = np.asarray(result.overflow_by_dest).reshape(-1)
+        nranks = int(np.asarray(result.count).reshape(-1).shape[0])
+        if m.size == nranks * nranks:
+            per_dest = m.reshape(nranks, nranks).sum(axis=0)
+        else:
+            per_dest = m
+        r = int(np.argmax(per_dest))
+        if weights is not None:
+            wn = np.asarray(weights, dtype=float).reshape(-1)
+            wtxt = f"{wn[r] / wn.sum():.4f}"
+        else:
+            wtxt = f"uniform (1/{per_dest.shape[0]})"
+        detail = (f"; worst destination rank {r} dropped "
+                  f"{int(per_dest[r])} rows (weight {wtxt})")
+    raise OverflowError(
+        f"sihsort capacity overflow: {total} rows dropped{detail} — raise "
+        f"capacity_factor or rebalance rank_weights"
+    )
+
+
+def _interpolated_splitters(hist, lo, hi, nbins, nranks, weights=None):
     """Splitter values s_1..s_{nranks-1} from the global histogram by linear
     interpolation inside the crossing bin — the 'IH' of SIHSort.
 
-    Returns (splitters, bracket_lo, bracket_hi): the containing-bin edges
-    seed the bisection refinement below."""
+    ``weights`` (per-rank, any positive scale) bends the uniform quantile
+    targets into THROUGHPUT-PROPORTIONAL ones: target_r = total *
+    cumsum(w)[r] / Σw, so rank r receives w_r/Σw of the global keys (the
+    makespan argument is in benchmarks/cost.py::sihsort_cost). None keeps
+    the uniform total*r/nranks targets bit-for-bit.
+
+    Returns (splitters, bracket_lo, bracket_hi, targets): the
+    containing-bin edges seed the bisection refinement below — which takes
+    the same targets, so refinement inherits the weighting for free."""
     counts = hist.astype(jnp.float32)
     cum = jnp.cumsum(counts)
     total = cum[-1]
     width = (hi - lo) / nbins
-    targets = total * jnp.arange(1, nranks, dtype=jnp.float32) / nranks
+    if weights is None:
+        targets = total * jnp.arange(1, nranks, dtype=jnp.float32) / nranks
+    else:
+        w = jnp.asarray(weights, jnp.float32)
+        wcum = jnp.cumsum(w)
+        targets = total * wcum[:-1] / wcum[-1]
     # first bin where cumulative mass reaches the target
     idx = jnp.searchsorted(cum, targets, side="left").astype(jnp.int32)
     idx = jnp.clip(idx, 0, nbins - 1)
@@ -199,6 +311,63 @@ def _refine_splitters(xs, b_lo, b_hi, targets, axis_name, rounds, backend):
     return hi
 
 
+_RANK_BACKENDS = ("jnp", "pallas", "auto")
+
+
+def _check_rank_backends(rank_backends, nranks):
+    rb = tuple(rank_backends)
+    if len(rb) != nranks:
+        raise ValueError(
+            f"rank_backends has {len(rb)} entries for {nranks} ranks"
+        )
+    bad = sorted({b for b in rb if b not in _RANK_BACKENDS})
+    if bad:
+        raise ValueError(
+            f"unknown rank backends {bad}; each must be one of "
+            f"{_RANK_BACKENDS}"
+        )
+    return rb
+
+
+def _rank_switch(fn, rank_backends, axis_name, *operands,
+                 rank_tuning=None, span_name="sihsort.local"):
+    """Trace-time fan-out of rank-LOCAL work over per-rank backends.
+
+    shard_map traces ONE program for every rank, so a per-rank backend
+    assignment lowers to ``lax.switch`` on ``axis_index``: one branch per
+    DISTINCT backend (each traced once, under that backend's optional
+    ``rank_tuning`` registry profile — knobs are trace-time statics, so the
+    profile applies while the branch traces), selected at run time by the
+    rank's slot in ``rank_backends``. Each branch opens a telemetry span
+    carrying its resolved backend, so a co-sort trace shows which ranks ran
+    jnp vs pallas. Collectives must NEVER be traced inside the branches
+    (ranks take different branches — a collective there deadlocks the
+    mesh); only the local sort and the merge finish route through here.
+    ``fn(backend, *operands)`` with backend=None for "auto" (the
+    registry's own resolution order then applies per primitive)."""
+    distinct = tuple(dict.fromkeys(rank_backends))
+
+    def branch(b):
+        prof = (rank_tuning or {}).get(b)
+
+        def run(*ops):
+            with telemetry.span(span_name, cat="distributed", backend=b):
+                if prof:
+                    with registry.tuning.overrides(prof):
+                        return fn(None if b == "auto" else b, *ops)
+                return fn(None if b == "auto" else b, *ops)
+
+        return run
+
+    if len(distinct) == 1:
+        return branch(distinct[0])(*operands)
+    slot = jnp.asarray(
+        [distinct.index(b) for b in rank_backends], jnp.int32
+    )
+    which = slot[jax.lax.axis_index(axis_name)]
+    return jax.lax.switch(which, [branch(b) for b in distinct], *operands)
+
+
 def sihsort(
     x: jax.Array,
     *,
@@ -211,6 +380,9 @@ def sihsort(
     backend: str | None = None,
     ak_tuning: dict | None = None,
     exchange: str = "all_to_all",
+    rank_backends=None,
+    rank_weights=None,
+    rank_tuning: dict | None = None,
 ) -> ShardedSort:
     """Distributed sort of the global array sharded as ``x`` along
     ``axis_name``. Must be called inside ``shard_map``. See module docs.
@@ -222,7 +394,25 @@ def sihsort(
     ``exchange``: ``"all_to_all"`` (default — ONE fused dense collective)
     or ``"ring"`` (nranks-1 chunked ``ppermute`` hops; each hop's transfer
     overlaps the incremental merge of the previously received chunk —
-    see ``benchmarks/cost.py`` for the overlap model)."""
+    see ``benchmarks/cost.py`` for the overlap model).
+
+    Heterogeneous co-processing (DESIGN.md §12):
+
+    ``rank_backends``: one AK backend name per rank ("jnp" | "pallas" |
+    "auto") — each rank resolves its heavy local work (step-1 sort, step-6
+    merge finish) through the registry with its OWN backend via
+    ``lax.switch`` on ``axis_index``; the light histogram/partition steps
+    keep the uniform ``backend``. ``rank_tuning`` optionally maps a backend
+    name to a registry override profile applied while that branch traces.
+    Mutually exclusive with ``local_sort``/``backend``; requires the dense
+    all_to_all exchange.
+
+    ``rank_weights``: throughput-proportional partition weights — either a
+    static per-rank sequence (enables RAGGED per-destination exchange
+    capacities via :func:`exchange_capacities`) or this rank's traced
+    scalar weight (all-gathered ONCE into the shared vector; capacities
+    stay uniform — collective shapes are static). Rank r then receives
+    w_r/Σw of the global keys instead of 1/nranks."""
     if exchange not in ("all_to_all", "ring"):
         raise ValueError(
             f"exchange must be 'all_to_all' or 'ring', got {exchange!r}"
@@ -231,9 +421,85 @@ def sihsort(
     n_local = x.shape[0]
     local_tuning = SIHSORT_TUNING if ak_tuning is None else ak_tuning
 
+    rb = None
+    if rank_backends is not None:
+        rb = _check_rank_backends(rank_backends, nranks)
+        if local_sort is not None:
+            raise ValueError(
+                "rank_backends and local_sort are mutually exclusive"
+            )
+        if backend is not None:
+            raise ValueError(
+                "pass either backend (uniform) or rank_backends (per-rank),"
+                " not both"
+            )
+        if exchange == "ring":
+            raise NotImplementedError(
+                "rank_backends requires exchange='all_to_all' (the ring's "
+                "incremental merges would re-trace the switch every hop)"
+            )
+
+    # weights: static vector -> ragged capacities; traced scalar -> ONE
+    # all_gather shares it, capacities stay uniform (static shapes)
+    w_static = None
+    w_vec = None
+    if rank_weights is not None:
+        if isinstance(rank_weights, jax.Array) and rank_weights.ndim == 0:
+            w_vec = jax.lax.all_gather(
+                rank_weights.astype(jnp.float32), axis_name
+            )
+        else:
+            try:
+                w_static = np.asarray(
+                    rank_weights, dtype=float
+                ).reshape(-1)
+            except Exception:
+                w_static = None  # traced: can't leave the trace
+            if w_static is None:
+                # an already-gathered traced vector: splitter targets only,
+                # capacities stay uniform (shapes must be static)
+                w_vec = jnp.asarray(
+                    rank_weights, jnp.float32
+                ).reshape(-1)
+                if w_vec.shape[0] != nranks:
+                    raise ValueError(
+                        f"rank_weights has {w_vec.shape[0]} entries for "
+                        f"{nranks} ranks"
+                    )
+            else:
+                if w_static.shape[0] != nranks:
+                    raise ValueError(
+                        f"rank_weights has {w_static.shape[0]} entries for "
+                        f"{nranks} ranks"
+                    )
+                if not np.all(np.isfinite(w_static)) or np.any(
+                    w_static <= 0
+                ):
+                    raise ValueError(
+                        "rank_weights must be positive finite, got "
+                        f"{w_static!r}"
+                    )
+                w_vec = jnp.asarray(w_static, jnp.float32)
+
     # -- 1. rank-local sort (composable local sorter, the paper's point) --
     with registry.tuning.overrides(local_tuning):
-        if payload is None:
+        if rb is not None:
+            if payload is None:
+                xs = _rank_switch(
+                    lambda b, v: SRT.merge_sort(v, backend=b),
+                    rb, axis_name, x, rank_tuning=rank_tuning,
+                    span_name="sihsort.local_sort",
+                )
+                ps = None
+            else:
+                xs, ps = _rank_switch(
+                    lambda b, v, p: tuple(
+                        SRT.merge_sort_by_key(v, p, backend=b)
+                    ),
+                    rb, axis_name, x, payload, rank_tuning=rank_tuning,
+                    span_name="sihsort.local_sort",
+                )
+        elif payload is None:
             sorter = local_sort or (
                 lambda v: SRT.merge_sort(v, backend=backend)
             )
@@ -252,44 +518,76 @@ def sihsort(
     lo, hi = -packed[0], packed[1]
     hi = jnp.where(hi > lo, hi, lo + 1.0)  # degenerate all-equal guard
 
-    # -- 3. global interpolated histogram: ONE collective ------------------
-    local_hist, _, _ = H.minmax_histogram(xs, nbins, lo, hi, backend=backend)
-    ghist = jax.lax.psum(local_hist, axis_name)
-    splitters, b_lo, b_hi, targets = _interpolated_splitters(
-        ghist, lo, hi, nbins, nranks
-    )
-    if refine_rounds:
-        splitters = _refine_splitters(
-            xs, b_lo, b_hi, targets, axis_name, refine_rounds, backend
-        )
+    # telemetry: the partition decision — resolved per-rank backends and
+    # weights as span args, so a trace of a co-sort shows which ranks ran
+    # jnp vs pallas and how the keys were cut (satellite of DESIGN.md §12)
+    part_args = {
+        "nranks": nranks,
+        "proportional": rank_weights is not None,
+        "rank_backends": (
+            list(rb) if rb is not None else (backend or "auto")
+        ),
+    }
+    if w_static is not None:
+        part_args["weights"] = [
+            round(float(v), 6) for v in (w_static / w_static.sum())
+        ]
+    elif w_vec is not None:
+        part_args["weights"] = "all_gathered"
 
-    # -- 4. partition the sorted shard: counts per destination rank --------
-    split_native = splitters.astype(x.dtype)
-    bounds = S.searchsortedlast(xs, split_native, backend=backend)  # (nranks-1,)
-    offsets = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), bounds.astype(jnp.int32),
-         jnp.full((1,), n_local, jnp.int32)]
-    )
-    counts = offsets[1:] - offsets[:-1]  # (nranks,)
+    with telemetry.span("sihsort.partition", cat="distributed",
+                        **part_args):
+        # -- 3. global interpolated histogram: ONE collective --------------
+        local_hist, _, _ = H.minmax_histogram(
+            xs, nbins, lo, hi, backend=backend
+        )
+        ghist = jax.lax.psum(local_hist, axis_name)
+        splitters, b_lo, b_hi, targets = _interpolated_splitters(
+            ghist, lo, hi, nbins, nranks, weights=w_vec
+        )
+        if refine_rounds:
+            splitters = _refine_splitters(
+                xs, b_lo, b_hi, targets, axis_name, refine_rounds, backend
+            )
+
+        # -- 4. partition the sorted shard: counts per destination rank ----
+        split_native = splitters.astype(x.dtype)
+        bounds = S.searchsortedlast(
+            xs, split_native, backend=backend
+        )  # (nranks-1,)
+        offsets = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), bounds.astype(jnp.int32),
+             jnp.full((1,), n_local, jnp.int32)]
+        )
+        counts = offsets[1:] - offsets[:-1]  # (nranks,)
 
     # -- 5. ONE fused capacity-padded exchange -----------------------------
-    cap = exchange_capacity(
-        n_local, nranks, capacity_factor,
+    # capacities follow the partition weights: destination r's slot count
+    # is proportional to the key fraction it is CUT to receive, so skewed
+    # weights don't waste buffer on starved ranks (the collective still
+    # ships uniform rows of width max(caps) — XLA needs static shapes —
+    # but validity is clamped per destination)
+    caps_np = exchange_capacities(
+        n_local, nranks, capacity_factor, weights=w_static,
         dtypes=[a.dtype for a in ((x,) if payload is None else (x, payload))],
     )
+    cap = int(caps_np.max())
     pad = KC.type_max(x.dtype)
     col = jnp.arange(cap, dtype=jnp.int32)[None, :]
     idx = offsets[:-1, None] + col
-    valid = col < counts[:, None]
     if capacity_factor == float(nranks):
-        # exact mode: cap == n_local and the destination counts sum to
-        # n_local, so no single destination can exceed cap — overflow is
-        # provably zero; skip the accounting instead of computing it
+        # exact mode: every destination's cap is n_local and the counts sum
+        # to n_local, so no single destination can exceed its cap —
+        # overflow is provably zero; skip the accounting
         sent = counts
+        overflow_by_dest = jnp.zeros((nranks,), jnp.int32)
         overflow = jnp.zeros((), jnp.int32)
     else:
-        sent = jnp.minimum(counts, cap)
-        overflow = jnp.sum(counts - sent)
+        sent, overflow_by_dest = capacity_plan(
+            counts, jnp.asarray(caps_np, jnp.int32)
+        )
+        overflow = jnp.sum(overflow_by_dest)
+    valid = col < sent[:, None]
     take = jnp.clip(idx, 0, max(n_local - 1, 0))
     send = jnp.where(valid, xs[take], pad)                      # (nranks, cap)
     # values [+ payload] + the per-destination count hidden as the last
@@ -311,7 +609,28 @@ def sihsort(
         # pre-sorted, sentinel-padded past its count. Only the network's
         # merge phases run — not the seed's full re-sort of the buffer.
         with registry.tuning.overrides(local_tuning):
-            if ps is None:
+            if rb is not None:
+                if ps is None:
+                    out = _rank_switch(
+                        lambda b, rv, rc: SRT.merge(
+                            rv.reshape(-1), nranks, counts=rc, backend=b
+                        ),
+                        rb, axis_name, recv_v, recv_counts,
+                        rank_tuning=rank_tuning,
+                        span_name="sihsort.merge_finish",
+                    )
+                    out_p = None
+                else:
+                    out, out_p = _rank_switch(
+                        lambda b, rv, rp, rc: tuple(SRT.merge_kv(
+                            rv.reshape(-1), rp.reshape(-1), nranks,
+                            counts=rc, backend=b,
+                        )),
+                        rb, axis_name, recv_v, recv_p, recv_counts,
+                        rank_tuning=rank_tuning,
+                        span_name="sihsort.merge_finish",
+                    )
+            elif ps is None:
                 out = SRT.merge(recv_v.reshape(-1), nranks,
                                 counts=recv_counts, backend=backend)
                 out_p = None
@@ -321,7 +640,8 @@ def sihsort(
                     counts=recv_counts, backend=backend,
                 )
         n_valid = jnp.sum(recv_counts).astype(jnp.int32)
-        return ShardedSort(out, out_p, n_valid, overflow.astype(jnp.int32))
+        return ShardedSort(out, out_p, n_valid, overflow.astype(jnp.int32),
+                           overflow_by_dest.astype(jnp.int32))
 
     # -- 5'/6'. chunked ring exchange with incremental merging -------------
     # Hop s ships each rank's chunk for rank (r+s) mod P one neighbourhood
@@ -363,7 +683,8 @@ def sihsort(
                 mv, mp = SRT.merge_kv(cat_v, cat_p, 2, backend=backend)
                 acc_v, acc_p = mv[:n_out], mp[:n_out]
             n_valid = n_valid + ch_c.astype(jnp.int32)
-    return ShardedSort(acc_v, acc_p, n_valid, overflow.astype(jnp.int32))
+    return ShardedSort(acc_v, acc_p, n_valid, overflow.astype(jnp.int32),
+                       overflow_by_dest.astype(jnp.int32))
 
 
 def sihsort_sharded(
@@ -383,14 +704,16 @@ def sihsort_sharded(
         def run(xl):
             r = sihsort(xl, axis_name=axis_name, **kw)
             return ShardedSort(
-                r.values, None, r.count.reshape(1), r.overflow.reshape(1)
+                r.values, None, r.count.reshape(1), r.overflow.reshape(1),
+                r.overflow_by_dest,
             )
         args = (x,)
     else:
         def run(xl, pl_):
             r = sihsort(xl, axis_name=axis_name, payload=pl_, **kw)
             return ShardedSort(
-                r.values, r.payload, r.count.reshape(1), r.overflow.reshape(1)
+                r.values, r.payload, r.count.reshape(1),
+                r.overflow.reshape(1), r.overflow_by_dest,
             )
         args = (x, payload)
 
@@ -398,6 +721,8 @@ def sihsort_sharded(
         P(axis_name),
         P(axis_name) if payload is not None else None,
         P(axis_name),
+        P(axis_name),
+        # (P, P) source x destination overflow matrix once unsharded
         P(axis_name),
     )
     # check_vma=False: the Pallas local sorters don't annotate

@@ -8,10 +8,20 @@ DESIGN.md §2).
 Defined as FUNCTIONS so importing this module never touches jax device
 state (device count is locked at first jax init — the dry-run sets
 XLA_FLAGS before importing anything).
+
+Heterogeneous meshes (DESIGN.md §12): :func:`make_hetero_mesh` builds a
+1-D mesh whose ranks are assigned DIFFERENT AK backends (jnp-on-CPU ranks
+beside Pallas ranks — the paper's simultaneous CPU–GPU co-processing), and
+:func:`hetero_rank_weights` turns the autotune cache's per-rank throughput
+into the partition weights ``core.distributed.sihsort`` cuts splitters by.
+:func:`co_sort` wires both into one call.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
+import numpy as np
 
 from repro.core import compat
 
@@ -42,3 +52,93 @@ def axis_domain(axis_name: str) -> str:
     over.
     """
     return "host" if axis_name == "pod" else "ici"
+
+
+_RANK_BACKENDS = ("jnp", "pallas", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class HeteroMesh:
+    """Mixed-backend mesh contract (DESIGN.md §12): ONE mesh axis whose
+    rank at position r runs AK backend ``rank_backends[r]``. The mesh
+    itself is an ordinary jax mesh — heterogeneity lives entirely in the
+    assignment, which ``core.distributed.sihsort`` lowers to a
+    ``lax.switch`` on ``axis_index`` (shard_map traces one program for
+    every rank; collectives stay outside the per-backend branches)."""
+
+    mesh: object
+    axis_name: str
+    rank_backends: tuple
+
+    @property
+    def nranks(self) -> int:
+        return len(self.rank_backends)
+
+
+def make_hetero_mesh(rank_backends, axis_name: str = "data") -> HeteroMesh:
+    """1-D mesh over ``len(rank_backends)`` devices with a per-rank backend
+    assignment — jnp-on-CPU ranks beside Pallas ranks in ONE collective
+    domain, the paper's simultaneous CPU–GPU co-processing shape."""
+    rb = tuple(rank_backends)
+    if not rb:
+        raise ValueError("rank_backends must name at least one rank")
+    bad = sorted({b for b in rb if b not in _RANK_BACKENDS})
+    if bad:
+        raise ValueError(
+            f"unknown rank backends {bad}; each must be one of "
+            f"{_RANK_BACKENDS}"
+        )
+    n = len(jax.devices())
+    if len(rb) > n:
+        raise ValueError(
+            f"rank_backends names {len(rb)} ranks but only {n} devices "
+            f"exist"
+        )
+    return HeteroMesh(
+        mesh=compat.make_mesh((len(rb),), (axis_name,)),
+        axis_name=axis_name,
+        rank_backends=rb,
+    )
+
+
+def hetero_rank_weights(rank_backends, n_local: int, dtype="float32", *,
+                        cache=None, primitive: str = "sort"):
+    """Throughput-proportional partition weights, one per rank: the
+    autotune cache's MEASURED per-size-class throughput when a compatible
+    entry exists for that rank's backend (tune/cache.py device-fingerprint
+    entries), the ``benchmarks/cost.py`` analytic model otherwise — a
+    foreign or missing fingerprint silently falls back to the model, it
+    never crashes and never degrades to uniform. Returns
+    ``(weights, sources)``: weights normalised to sum 1, sources the
+    per-rank "measured" | "model" provenance."""
+    from repro.tune import search as tsearch
+
+    ws, srcs = [], []
+    for b in rank_backends:
+        thr, src = tsearch.rank_throughput(
+            n_local, dtype, backend=b, cache=cache, primitive=primitive
+        )
+        ws.append(thr)
+        srcs.append(src)
+    w = np.asarray(ws, dtype=float)
+    return w / w.sum(), tuple(srcs)
+
+
+def co_sort(x, hetero: HeteroMesh, *, payload=None, cache=None,
+            weights=None, **kw):
+    """Convenience: throughput-proportional SIHSort over a
+    :class:`HeteroMesh` — resolves per-rank weights (autotune cache or
+    model fallback via :func:`hetero_rank_weights`) and runs
+    ``sihsort_sharded`` with the mesh's backend assignment. Extra ``kw``
+    (capacity_factor, refine_rounds, ...) pass through."""
+    from repro.core import distributed as D
+
+    n_local = max(int(x.shape[0]) // hetero.nranks, 1)
+    if weights is None:
+        weights, _ = hetero_rank_weights(
+            hetero.rank_backends, n_local, str(x.dtype), cache=cache
+        )
+    return D.sihsort_sharded(
+        x, hetero.mesh, hetero.axis_name, payload=payload,
+        rank_backends=hetero.rank_backends, rank_weights=weights, **kw,
+    )

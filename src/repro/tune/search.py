@@ -228,6 +228,37 @@ def modelled_time(name: str, backend: str, n: int, itemsize: int,
     return pallas_model_time(hbm, 1)
 
 
+def rank_throughput(n: int, dtype="float32", *, backend="auto",
+                    cache=None, primitive: str = "sort"):
+    """Per-rank sort throughput estimate (elements/second) for the co-sort
+    scheduler's partition weights (``launch.mesh.hetero_rank_weights``).
+
+    Resolution order per rank: a compatible autotune-cache entry for this
+    (primitive, dtype, size-class) key whose recorded backend matches the
+    rank's — measured provenance — else the analytic ``modelled_time`` for
+    the rank's backend. A foreign/missing device fingerprint means
+    ``cache.lookup`` serves nothing (counted ``stale``/``miss``, see
+    tune/cache.py) and the model answers: the scheduler never crashes on a
+    cache written by a different machine and never silently falls back to
+    uniform weights. Returns ``(elements_per_second, source)`` with source
+    in {"measured", "model"}."""
+    n = max(int(n), 1)
+    dt = jnp.dtype(dtype)
+    if cache is not None:
+        e = cache.lookup(primitive, str(dt), KC.size_class(n))
+        if e is not None and e.get("t_us"):
+            eb = e.get("backend")
+            # a measured entry only describes THIS rank if it was measured
+            # on the rank's backend (or the rank defers to "auto")
+            if backend in (None, "auto") or eb in (None, backend):
+                return n / (float(e["t_us"]) * 1e-6), "measured"
+    b = backend
+    if b not in ("jnp", "pallas"):
+        b = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    t = max(modelled_time(primitive, b, n, dt.itemsize, {}), 1e-12)
+    return n / t, "model"
+
+
 # -- representative operands -------------------------------------------------
 # Module-level statics: stable function identity -> one registry cache key
 # per (primitive, backend, knobs) across the whole search.

@@ -434,3 +434,98 @@ def test_bench_autotune_gate(tmp_path):
     assert entry["measure"] == "model"
     assert entry["second_pass_stats"]["misses"] == 0
     assert entry["nondefault_entries"] >= 1
+
+
+# -- foreign fingerprint: co-sort weights fall back to the model -------------
+
+def test_foreign_fingerprint_rank_weights_model_fallback(tmp_path):
+    """A cache written on a different machine must never crash the co-sort
+    scheduler and never silently degrade it to uniform weights: the
+    incompatible load serves nothing (counted ``stale``), every rank's
+    throughput resolves through the analytic model, and the resulting
+    weights are still SKEWED for a mixed jnp/pallas mesh. Fresh-process
+    subprocess, like the cross-process reuse test above."""
+    path = str(tmp_path / "autotune.json")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+    def run_child(code):
+        proc = subprocess.run(
+            [sys.executable, "-c", code], env=env, capture_output=True,
+            text=True, timeout=600,
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+
+    # process 1: a real model-measured cache, persisted
+    run_child(f"""
+import json
+from repro import tune as T
+cache = T.tune_all(sizes=(4096, 1048576), dtypes=("float32",),
+                   primitives=("sort",), measure=T.model_measure,
+                   path={path!r})
+cache.save()
+print(json.dumps({{"entries": len(cache)}}))
+""")
+
+    # sabotage: rewrite the on-disk fingerprint to a foreign device
+    doc = json.load(open(path))
+    doc["fingerprint"]["device_kind"] = "TPU v9 (elsewhere)"
+    json.dump(doc, open(path, "w"))
+
+    # process 2: fresh load — incompatible, model answers, weights skewed
+    out = run_child(f"""
+import json
+import numpy as np
+from repro import tune as T
+from repro.launch import mesh as LM
+from repro.tune import search as tsearch
+
+cache = T.TuneCache.load({path!r})
+thr, src = tsearch.rank_throughput(2**20, "float32", backend="jnp",
+                                   cache=cache)
+w, srcs = LM.hetero_rank_weights(("jnp", "jnp") + ("pallas",) * 6,
+                                 2**20, cache=cache)
+print(json.dumps({{"compatible": cache.compatible, "source": src,
+                   "sources": list(srcs), "thr": thr,
+                   "stale": cache.stats.as_dict()["stale"],
+                   "wsum": float(np.sum(w)),
+                   "skew": float(np.max(w) / np.min(w)),
+                   "weights": [float(v) for v in w]}}))
+""")
+    assert out["compatible"] is False
+    assert out["source"] == "model" and out["thr"] > 0
+    assert set(out["sources"]) == {"model"}
+    # every per-rank resolution hit the incompatible cache, counted stale
+    assert out["stale"] >= 9
+    assert abs(out["wsum"] - 1.0) < 1e-9
+    # NOT uniform: jnp ranks weigh measurably less than pallas ranks
+    assert out["skew"] > 1.5
+    assert out["weights"][0] == out["weights"][1] < out["weights"][2]
+
+
+def test_compatible_cache_serves_measured_rank_throughput(tmp_path):
+    """The happy path the fallback test brackets: a compatible cache entry
+    whose backend matches the rank's serves MEASURED provenance; a
+    mismatched rank backend falls back to the model in-process."""
+    from repro.tune import search as tsearch
+
+    cache, _ = _model_cache(tmp_path)
+    e = cache.lookup("sort", "float32", KC.size_class(131072))
+    assert e is not None and e.get("t_us")
+    thr, src = tsearch.rank_throughput(131072, "float32",
+                                       backend=e["backend"], cache=cache)
+    assert src == "measured"
+    assert abs(thr - 131072 / (float(e["t_us"]) * 1e-6)) < 1e-6 * thr
+    # "auto" rank defers to whatever the cache measured: still measured
+    _, src_auto = tsearch.rank_throughput(131072, "float32",
+                                          backend="auto", cache=cache)
+    assert src_auto == "measured"
+    # a rank pinned to the OTHER backend must not inherit the entry
+    other = "jnp" if e["backend"] == "pallas" else "pallas"
+    _, src_other = tsearch.rank_throughput(131072, "float32",
+                                           backend=other, cache=cache)
+    assert src_other == "model"
+    # no cache at all: model, never a crash
+    _, src_none = tsearch.rank_throughput(131072, "float32",
+                                          backend="jnp", cache=None)
+    assert src_none == "model"

@@ -1,0 +1,364 @@
+"""Heterogeneous co-sort (DESIGN.md §12): mixed-backend meshes, ragged
+exchange capacities, throughput-proportional splitters.
+
+Host-side pins (fast, single device): the ragged capacity vector
+reproduces the uniform scalar rule exactly when weights are absent; the
+capacity plan CONSERVES rows (``Σsent + Σoverflow == Σcounts``) for any
+lognormal key mix and any positive weight vector — ragged capacities
+never silently drop rows (hypothesis property); the overflow error names
+the offending destination rank AND its weight; weighted splitter targets
+follow ``cumsum(w)/Σw``; the hetero cost model degenerates bit-exactly to
+the symmetric one at uniform weights and reproduces the 4.93× calibration.
+
+Subprocess pins (8 fake devices, ``slow``): mixed jnp/pallas ranks sort
+bitwise-identically to a single-rank reference; traced-scalar rank
+weights cost exactly ONE extra all_gather; the partition telemetry span
+carries the resolved per-rank backends and weights.
+"""
+import numpy as np
+import pytest
+
+from repro.core import distributed as D
+
+
+# -- ragged capacities -------------------------------------------------------
+
+def test_exchange_capacities_uniform_matches_scalar_rule():
+    for n_local, nranks, cf in [(8192, 8, 2.0), (1000, 3, 1.5),
+                                (4096, 8, 8.0), (7, 2, 1.0)]:
+        caps = D.exchange_capacities(n_local, nranks, cf)
+        scalar = D.exchange_capacity(n_local, nranks, cf)
+        assert caps.shape == (nranks,) and (caps == scalar).all()
+
+
+def test_exchange_capacities_weighted_budget_and_even_rounding():
+    w = [1, 1, 5, 5]
+    caps = D.exchange_capacities(8192, 4, 2.0, weights=w)
+    # skewed: heavy ranks get 5x the slots of light ones (ceil rounding)
+    assert caps[2] >= 4 * caps[0] and caps[0] >= 1
+    # total budget stays ~ n_local * capacity_factor (ceil slack only)
+    assert 8192 * 2.0 <= caps.sum() <= 8192 * 2.0 + 4
+    # 16-bit operands round every destination to even (2 lanes per word)
+    caps16 = D.exchange_capacities(1001, 4, 2.0, weights=w,
+                                   dtypes=("bfloat16",))
+    assert (caps16 % 2 == 0).all()
+    # exact mode pins every destination at n_local regardless of skew
+    exact = D.exchange_capacities(512, 4, 4.0, weights=w)
+    assert (exact == 512).all()
+
+
+def test_exchange_capacities_validates_weights():
+    with pytest.raises(ValueError, match="3 entries for 4 ranks"):
+        D.exchange_capacities(100, 4, 2.0, weights=[1, 1, 1])
+    with pytest.raises(ValueError, match="positive finite"):
+        D.exchange_capacities(100, 4, 2.0, weights=[1, -1, 1, 1])
+    with pytest.raises(ValueError, match="positive finite"):
+        D.exchange_capacities(100, 4, 2.0, weights=[1, np.inf, 1, 1])
+
+
+def _conservation_case(seed, nranks, n_local, cf, logw):
+    """One instance of the conservation property: ragged capacities never
+    silently drop rows — ``Σsent + Σoverflow == Σcounts`` for a lognormal
+    key mix cut at weighted quantile targets, and exact mode provably
+    overflows nothing."""
+    rng = np.random.default_rng(seed)
+    w = np.exp(np.asarray((list(logw) * nranks)[:nranks], dtype=float))
+    caps = D.exchange_capacities(n_local, nranks, cf, weights=w)
+    # lognormal keys cut at weighted quantile targets -> bin counts
+    keys = rng.lognormal(0.0, 2.0, size=n_local)
+    targets = n_local * np.cumsum(w)[:-1] / w.sum()
+    splits = np.quantile(keys, np.clip(targets / n_local, 0, 1))
+    counts = np.diff(
+        np.concatenate([[0], np.searchsorted(np.sort(keys), splits),
+                        [n_local]])
+    ).astype(np.int64)
+    assert counts.sum() == n_local
+    sent, over = D.capacity_plan(counts, caps)
+    sent, over = np.asarray(sent), np.asarray(over)
+    assert (sent >= 0).all() and (over >= 0).all()
+    assert (sent == np.minimum(counts, caps)).all()
+    assert int(sent.sum() + over.sum()) == n_local  # conservation
+    # skewed keys can overflow a cf<nranks plan, but exact mode cannot
+    exact = D.exchange_capacities(n_local, nranks, float(nranks),
+                                  weights=w)
+    _, over_exact = D.capacity_plan(counts, exact)
+    assert int(np.asarray(over_exact).sum()) == 0
+
+
+def test_capacity_plan_conservation_deterministic_grid():
+    """Always-on fallback for the hypothesis property below: a fixed grid
+    of skews x sizes x capacity factors, including degenerate n_local=1
+    and the exact-mode corner."""
+    for seed, nranks, n_local, cf, logw in [
+        (0, 8, 8192, 2.0, [-3, -3, 0, 0, 1, 1, 3, 3]),
+        (1, 2, 1, 1.0, [0, 2]),
+        (2, 16, 5000, 1.5, [-2, 3]),
+        (3, 3, 997, 3.0, [3, -3, 0]),
+        (4, 4, 4096, 4.0, [1, 1, 1, 1]),  # cf == nranks: exact mode
+    ]:
+        _conservation_case(seed, nranks, n_local, cf, logw)
+
+
+def test_capacity_plan_conservation_lognormal_property():
+    pytest.importorskip(
+        "hypothesis", reason="optional test dep (pip install .[test])"
+    )
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        seed=st.integers(0, 2**32 - 1),
+        nranks=st.integers(2, 16),
+        n_local=st.integers(1, 5000),
+        cf=st.floats(1.0, 4.0, allow_nan=False),
+        logw=st.lists(st.floats(-3, 3, allow_nan=False), min_size=2,
+                      max_size=16),
+    )
+    def check(seed, nranks, n_local, cf, logw):
+        _conservation_case(seed, nranks, n_local, cf, logw)
+
+    check()
+
+
+# -- overflow error names rank + weight --------------------------------------
+
+def _overflown(nranks=4, by_dest=(0, 9, 0, 2)):
+    by_dest = np.asarray(by_dest, np.int32)
+    return D.ShardedSort(
+        values=np.zeros(8, np.float32), payload=None,
+        count=np.full(nranks, 1, np.int32),
+        overflow=np.int32(by_dest.sum()), overflow_by_dest=by_dest,
+    )
+
+
+def test_assert_no_overflow_names_rank_and_weight():
+    D.assert_no_overflow(_overflown(by_dest=(0, 0, 0, 0)))  # clean: no-op
+    with pytest.raises(OverflowError) as ei:
+        D.assert_no_overflow(_overflown(), weights=[1, 1, 1, 5])
+    msg = str(ei.value)
+    assert "11 rows dropped" in msg
+    assert "worst destination rank 1" in msg and "dropped 9 rows" in msg
+    assert "weight 0.1250" in msg  # 1/8 of the weight mass
+    assert "capacity_factor" in msg and "rank_weights" in msg
+    # without weights the message still names the rank, weight is uniform
+    with pytest.raises(OverflowError, match=r"uniform \(1/4\)"):
+        D.assert_no_overflow(_overflown())
+    # sharded (P, P) source x dest matrix: summed over sources per dest
+    m = np.zeros((4, 4), np.int32)
+    m[0, 2] = 3
+    m[3, 2] = 4
+    sharded = D.ShardedSort(
+        values=np.zeros(8, np.float32), payload=None,
+        count=np.full(4, 1, np.int32), overflow=np.int32(7),
+        overflow_by_dest=m.reshape(-1),
+    )
+    with pytest.raises(OverflowError, match="rank 2 dropped 7 rows"):
+        D.assert_no_overflow(sharded)
+
+
+# -- weighted splitter targets ----------------------------------------------
+
+def test_interpolated_splitters_weighted_targets():
+    import jax.numpy as jnp
+
+    nbins, nranks = 512, 4
+    # uniform histogram over [0, 1): splitters land at the quantile targets
+    hist = jnp.full(nbins, 8.0)
+    lo, hi = jnp.float32(0.0), jnp.float32(1.0)
+    uni, _, _, uni_t = D._interpolated_splitters(hist, lo, hi, nbins,
+                                                 nranks)
+    np.testing.assert_allclose(np.asarray(uni), [0.25, 0.5, 0.75],
+                               atol=1e-3)
+    w = np.array([1.0, 1.0, 3.0, 3.0])
+    prop, _, _, prop_t = D._interpolated_splitters(
+        hist, lo, hi, nbins, nranks, weights=w
+    )
+    np.testing.assert_allclose(np.asarray(prop),
+                               np.cumsum(w)[:-1] / w.sum(), atol=1e-3)
+    # refinement consumes the SAME targets, so it inherits the weighting
+    total = float(np.asarray(hist).sum())
+    np.testing.assert_allclose(np.asarray(prop_t),
+                               total * np.cumsum(w)[:-1] / w.sum(),
+                               rtol=1e-6)
+    # weights=None stays bit-for-bit the legacy uniform path
+    again, _, _, _ = D._interpolated_splitters(hist, lo, hi, nbins,
+                                               nranks, weights=None)
+    assert (np.asarray(uni) == np.asarray(again)).all()
+    assert (np.asarray(uni_t) == np.asarray(
+        total * np.arange(1, nranks) / nranks
+    ).astype(np.float32)).all()
+
+
+# -- cost model: degeneration + calibration ----------------------------------
+
+def test_hetero_cost_degenerates_and_calibrates():
+    from benchmarks import cost
+
+    n_bytes, P = 4 * 2**20, 8
+    sym = cost.sihsort_cost(n_bytes, P)
+    deg = cost.sihsort_cost(n_bytes, P, weights=[1.0] * P)
+    assert deg["t_total_s"] == sym["t_total_s"]  # bit-exact degeneration
+    for k in ("t_local_s", "t_comm_s", "t_merge_s"):
+        assert float(np.asarray(deg[k])[0]) == sym[k]
+    # the paper's direct-vs-staged calibration survives the refactor
+    speedup, _, _ = cost.direct_vs_staged(4 * 10**6, nranks=8)
+    assert abs(speedup - 4.93) < 0.01
+    # proportional beats uniform on a skewed mesh by the gate margin
+    backends = ("jnp", "jnp") + ("pallas",) * 6
+    _, _, gain = cost.hetero_partition_gain(n_bytes, backends)
+    assert gain >= 1.3
+    with pytest.raises(NotImplementedError):
+        cost.sihsort_cost(n_bytes, P, weights=[1.0] * P, exchange="ring")
+
+
+def test_rank_backend_validation():
+    with pytest.raises(ValueError, match="cuda"):
+        D._check_rank_backends(("jnp", "cuda"), 2)
+    with pytest.raises(ValueError, match="3 entries for 2 ranks"):
+        D._check_rank_backends(("jnp", "pallas", "auto"), 2)
+
+
+def test_make_hetero_mesh_validation():
+    from repro.launch import mesh as LM
+
+    with pytest.raises(ValueError, match="at least one"):
+        LM.make_hetero_mesh(())
+    with pytest.raises(ValueError, match="unknown rank backends"):
+        LM.make_hetero_mesh(("jnp", "gpu"))
+    with pytest.raises(ValueError, match="devices"):
+        LM.make_hetero_mesh(("jnp",) * 1024)
+
+
+def test_hetero_rank_weights_model_fallback_is_skewed():
+    """No cache at all -> every rank resolves through the analytic model;
+    weights normalise to 1 and jnp ranks weigh measurably less than pallas
+    ranks at production shard sizes."""
+    from repro.launch import mesh as LM
+
+    w, srcs = LM.hetero_rank_weights(("jnp", "pallas", "pallas"), 2**20)
+    assert srcs == ("model", "model", "model")
+    assert abs(w.sum() - 1.0) < 1e-12
+    assert w[1] == w[2] and w[1] / w[0] > 1.5
+
+
+# -- subprocess pins (8 fake devices) ----------------------------------------
+
+slow = pytest.mark.slow
+
+
+@slow
+def test_hetero_co_sort_bitwise_equal(multidevice):
+    """Mixed jnp/pallas ranks with throughput-proportional weights sort
+    bitwise-identically to the single-rank reference AND np.sort; the
+    proportional split lands heavy ranks more rows; zero overflow."""
+    multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from repro import core as ak
+from repro.launch import mesh as LM
+
+backends = ("jnp", "jnp") + ("pallas",) * 6
+hm = LM.make_hetero_mesh(backends)
+w, srcs = LM.hetero_rank_weights(backends, 2**20)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.lognormal(0.0, 2.0, size=2**14).astype(np.float32))
+r = ak.sihsort_sharded(x, hm.mesh, hm.axis_name,
+                       rank_backends=hm.rank_backends, rank_weights=w,
+                       capacity_factor=2.0)
+ak.assert_no_overflow(r, weights=w)
+got = np.asarray(ak.collect_sorted(r))
+ref = np.asarray(ak.merge_sort(x))
+assert got.shape == ref.shape and (got == ref).all()
+assert (got == np.sort(np.asarray(x))).all()
+counts = np.asarray(r.count)
+assert counts.sum() == x.shape[0]
+# heavy (pallas) ranks received more than light (jnp) ranks
+assert counts[2:].min() > counts[:2].max()
+
+# invalid combinations raise during tracing, not silently misroute
+try:
+    ak.sihsort_sharded(x, hm.mesh, hm.axis_name,
+                       rank_backends=backends, backend="jnp")
+    raise SystemExit("backend + rank_backends should have raised")
+except ValueError as e:
+    assert "either backend" in str(e), e
+try:
+    ak.sihsort_sharded(x, hm.mesh, hm.axis_name,
+                       rank_backends=backends, exchange="ring")
+    raise SystemExit("ring + rank_backends should have raised")
+except NotImplementedError as e:
+    assert "ring" in str(e), e
+print("OK")
+""")
+
+
+@slow
+def test_hetero_traced_scalar_weight_costs_one_all_gather(multidevice):
+    """A traced 0-d per-rank weight is gathered with exactly ONE
+    all_gather; static weights add NO collective. Capacities stay uniform
+    on the traced path (static shapes), so exactness still holds."""
+    multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import core as ak
+from repro.core import distributed as D
+from repro.core import compat
+
+mesh = compat.make_mesh((8,), ("data",))
+rng = np.random.default_rng(1)
+x = jnp.asarray(rng.normal(size=2**13).astype(np.float32))
+
+def run(weights):
+    def f(xs):
+        r = D.sihsort(xs, axis_name="data", rank_weights=weights,
+                      capacity_factor=2.0, refine_rounds=4)
+        return r.values, r.count.reshape(1)
+    return compat.shard_map(f, mesh=mesh, in_specs=P("data"),
+                            out_specs=(P("data"), P("data")),
+                            check_vma=False)
+
+static = ak.count_collectives(run(np.full(8, 1.0)), x)
+traced = ak.count_collectives(run(jnp.float32(1.0)), x)
+assert static.get("all_gather", 0) == 0, static
+assert traced.get("all_gather", 0) == 1, traced
+assert traced.get("all_to_all", 0) == 1 == static.get("all_to_all", 0)
+v, c = jax.jit(run(jnp.float32(1.0)))(x)
+got = np.asarray(ak.collect_sorted(
+    D.ShardedSort(v, None, c.reshape(-1), jnp.int32(0))))
+assert (got == np.sort(np.asarray(x))).all()
+print("OK")
+""")
+
+
+@slow
+def test_hetero_partition_telemetry_span(multidevice):
+    """The partition step's telemetry span records the resolved per-rank
+    backends and (rounded) weights; the per-branch local-sort spans carry
+    the backend each rank resolved to."""
+    multidevice("""
+import json, numpy as np, jax.numpy as jnp
+from repro import core as ak
+from repro.launch import mesh as LM
+from repro.runtime import telemetry
+
+backends = ("jnp", "pallas")
+hm = LM.make_hetero_mesh(backends)
+w = np.array([0.25, 0.75])
+x = jnp.asarray(np.random.default_rng(2).normal(size=4096)
+                .astype(np.float32))
+telemetry.enable()
+r = ak.sihsort_sharded(x, hm.mesh, hm.axis_name,
+                       rank_backends=backends, rank_weights=w,
+                       capacity_factor=2.0)
+np.asarray(r.values)  # force execution before reading the buffer
+evs = telemetry.events()
+part = [e for e in evs if e["name"] == "sihsort.partition"]
+assert part, sorted({e["name"] for e in evs})
+args = part[0]["args"]
+assert args["rank_backends"] == ["jnp", "pallas"]
+assert args["proportional"] is True
+assert args["weights"] == [0.25, 0.75]
+local = {e["args"]["backend"] for e in evs
+         if e["name"] == "sihsort.local_sort"}
+assert local == {"jnp", "pallas"}, local
+print("OK")
+""")
